@@ -1,0 +1,95 @@
+"""Shared benchmark infrastructure.
+
+Benchmarks run in SUBPROCESSES spawned by ``benchmarks.run``: each gets its
+own ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` so the parent
+process (and pytest) keep the single real CPU device. Wall-clock numbers on
+CPU host devices are *proxies* — the paper's OPA/IB NICs are not present —
+so every benchmark also reports structural metrics (token-dependency counts,
+HLO collective chains) that transfer to the TPU target, and EXPERIMENTS.md
+validates *directionality and ratio ordering*, not absolute microseconds.
+
+CPU-specific choice: ordering tokens use ``token_impl="data"`` — XLA:CPU
+elides optimization-barrier before scheduling, which would erase the very
+serialization being measured. The "data" tokens thread the dependency
+through payload arithmetic (numerically a no-op), which no backend can
+remove. On TPU the zero-copy "barrier" impl is the default.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def mesh_1d(n: Optional[int] = None, name: str = "data"):
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    n = n or len(devs)
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devs)} — run via benchmarks.run "
+            f"(it sets XLA_FLAGS) or set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return Mesh(np.array(devs[:n]), (name,))
+
+
+def time_fn(fn: Callable[[], object], *, warmup: int = 3, reps: int = 10,
+            min_time_s: float = 0.2) -> Dict[str, float]:
+    """Median wall-time of ``fn()`` (which must block until done)."""
+    for _ in range(warmup):
+        fn()
+    times: List[float] = []
+    t_total = 0.0
+    r = 0
+    while r < reps or t_total < min_time_s:
+        t0 = time.perf_counter()
+        fn()
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        t_total += dt
+        r += 1
+        if r > 200:
+            break
+    arr = np.array(times)
+    return {"median_s": float(np.median(arr)), "mean_s": float(arr.mean()),
+            "min_s": float(arr.min()), "reps": len(arr)}
+
+
+def block(tree):
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+        else x, tree)
+
+
+class CSV:
+    """Tiny CSV emitter: header from the first row's keys."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[Dict] = []
+
+    def add(self, **row):
+        self.rows.append(row)
+
+    def dump(self, fh=None) -> str:
+        import sys
+        fh = fh or sys.stdout
+        if not self.rows:
+            return ""
+        cols = list(self.rows[0].keys())
+        lines = [",".join(cols)]
+        for r in self.rows:
+            lines.append(",".join(_fmt(r.get(c)) for c in cols))
+        out = "\n".join(lines)
+        print(f"# benchmark: {self.name}", file=fh)
+        print(out, file=fh, flush=True)
+        return out
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

@@ -1,0 +1,146 @@
+"""Message-rate microbenchmark — paper Figs. 10, 11, 12, 13, 14.
+
+Aggregate rate at which parallel "threads" (streams) inject small messages.
+Each stream issues OPS_PER_STREAM point-to-point messages (ppermute pairs,
+the Isend/Irecv analogue) or RMA Puts per step. Execution modes mirror §5:
+
+  everywhere        no thread-safety tokens at all, one stream per "core"
+                    (MPI everywhere: private library state per process)
+  ser_comm+orig     ONE context, global critical section (original MPICH)
+  ser_comm+vcis     ONE context on the multi-VCI library (no exposed
+                    parallelism -> 1 VCI; optimizations can't help)
+  par_comm+orig     N contexts but a single global lock (original MPICH
+                    given user-exposed parallelism)
+  par_comm+vcis     N contexts -> N VCIs, hybrid progress (this paper)
+  endpoints         N contexts with explicitly pinned VCIs, pure per-VCI
+                    progress (the user-visible-endpoints upper bound)
+
+Reported: million messages/s (aggregate) + the token-dependency depth
+(structural serialization, hardware-independent).
+"""
+
+from __future__ import annotations
+
+import argparse
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import CSV, block, mesh_1d, time_fn
+from repro.core.collectives import CommRuntime
+from repro.core.comm import CommWorld
+
+OPS_PER_STREAM = 16
+
+
+def build_step(mode: str, n_streams: int, msg_elems: int, *, rma: bool,
+               mesh, no_token: bool = False):
+    """Returns a jitted step issuing n_streams x OPS_PER_STREAM messages."""
+    n = mesh.size
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    kind = "rma" if rma else "p2p"
+
+    def step(x):  # x: per-shard (n_streams, msg_elems)
+        if mode == "everywhere" or no_token:
+            # private library state per core: no tokens at all
+            outs = []
+            for s in range(n_streams):
+                v = x[s]
+                for _ in range(OPS_PER_STREAM):
+                    v = jax.lax.ppermute(v, "data", perm)
+                outs.append(v)
+            return jnp.stack(outs)
+
+        if mode == "ser_comm+orig":
+            world = CommWorld(num_vcis=1)
+            rt = CommRuntime(world, progress="global", token_impl="data")
+            shared = world.create("c0", kind=kind)
+            ctxs = [shared] * n_streams
+        elif mode == "ser_comm+vcis":
+            world = CommWorld(num_vcis=max(n_streams, 1))
+            rt = CommRuntime(world, progress="hybrid", token_impl="data")
+            shared = world.create("c0", kind=kind)
+            ctxs = [shared] * n_streams
+        elif mode == "par_comm+orig":
+            world = CommWorld(num_vcis=1)
+            rt = CommRuntime(world, progress="global", token_impl="data")
+            ctxs = [world.create(f"c{s}", kind=kind) for s in range(n_streams)]
+        elif mode == "par_comm+vcis":
+            world = CommWorld(num_vcis=n_streams + 1)
+            rt = CommRuntime(world, progress="hybrid",
+                             join_every=4 * n_streams, token_impl="data")
+            ctxs = [world.create(f"c{s}", kind=kind) for s in range(n_streams)]
+        elif mode == "endpoints":
+            world = CommWorld(num_vcis=n_streams + 1)
+            rt = CommRuntime(world, progress="per_vci", token_impl="data")
+            ctxs = [world.create(f"c{s}", kind=kind, vci=(s % world.pool.num_vcis))
+                    for s in range(n_streams)]
+        else:
+            raise ValueError(mode)
+
+        outs = []
+        for s in range(n_streams):
+            v = x[s]
+            for _ in range(OPS_PER_STREAM):
+                if rma:
+                    v = rt.put(v, ctxs[s], axis="data", perm=perm)
+                else:
+                    v = rt.sendrecv(v, ctxs[s], axis="data", perm=perm)
+            outs.append(v)
+        return rt.barrier(jnp.stack(outs))
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=P(None, None),
+                              out_specs=P(None, None), check_vma=False))
+    x = jnp.ones((n_streams, msg_elems), jnp.float32)
+    hlo = f.lower(x).compile().as_text()
+    f(x)  # warm
+    return f, x, hlo
+
+
+MODES = ["everywhere", "ser_comm+orig", "ser_comm+vcis", "par_comm+orig",
+         "par_comm+vcis", "endpoints"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rma", action="store_true", help="MPI_Put (Figs 13/14)")
+    ap.add_argument("--no-token", action="store_true",
+                    help="Fig 12: disable locking/atomics analogue")
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--sizes", type=int, nargs="*",
+                    default=[2, 512, 8192])   # 8B .. 32KB messages
+    ap.add_argument("--streams", type=int, nargs="*",
+                    default=[1, 2, 4, 8, 16])
+    args = ap.parse_args()
+
+    mesh = mesh_1d(args.devices)
+    name = "message_rate" + ("_rma" if args.rma else "")
+    csv = CSV(name)
+
+    from repro.launch.roofline import collective_critical_depth
+
+    for msg in args.sizes:
+        for ns in args.streams:
+            for mode in MODES:
+                f, x, hlo = build_step(mode, ns, msg, rma=args.rma, mesh=mesh,
+                                       no_token=args.no_token and
+                                       mode == "par_comm+vcis")
+                t = time_fn(lambda: block(f(x)))
+                n_msgs = ns * OPS_PER_STREAM * mesh.size
+                d = collective_critical_depth(hlo)
+                # projected rate on a parallel network: depth is the serial
+                # bottleneck, so rate scales with ops/depth (the structural
+                # analogue of the paper's thread-scaling curves)
+                csv.add(mode=mode, streams=ns, msg_bytes=msg * 4,
+                        mmsgs_per_s=n_msgs / t["median_s"] / 1e6,
+                        us_per_step=t["median_s"] * 1e6,
+                        critical_depth=d["critical_depth"],
+                        parallelism=round(d["parallelism"], 3))
+    csv.dump()
+
+
+if __name__ == "__main__":
+    main()

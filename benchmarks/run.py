@@ -1,0 +1,78 @@
+"""Benchmark harness: one benchmark per paper table/figure.
+
+Each benchmark runs in a SUBPROCESS with its own virtual-device count
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N``) so this parent
+process never locks a multi-device CPU topology. Results (CSV) stream to
+stdout and are archived under reports/bench/.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only message_rate
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (module, extra args, devices, paper figure)
+BENCHMARKS = [
+    ("benchmarks.overhead", [], 8, "Figs 2/3 (FG vs Global) + Fig 4 (setup)"),
+    ("benchmarks.message_rate", [], 8, "Figs 10/11 (Isend rate)"),
+    ("benchmarks.message_rate", ["--rma"], 8, "Figs 13/14 (Put rate)"),
+    ("benchmarks.message_rate", ["--no-token", "--streams", "16",
+                                 "--sizes", "2"], 8,
+     "Fig 12 (no locks/atomics)"),
+    ("benchmarks.progress_ablation", [], 8, "Figs 5-8 + Fig 19 ablations"),
+    ("benchmarks.mapping_mismatch", [], 8, "Fig 17 (pool exhaustion)"),
+    ("benchmarks.stencil", [], 16, "Fig 22 (stencil halo)"),
+    ("benchmarks.ebms", [], 8, "Figs 24/25 (EBMS fetch)"),
+    ("benchmarks.bspmm", [], 8, "Fig 27 (BSPMM accumulate)"),
+    ("benchmarks.trainer_streams", [], 8,
+     "paper claim at the trainer API level (VCI grad streams)"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on the module name")
+    ap.add_argument("--out", default=os.path.join(REPO, "reports", "bench"))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for mod, extra, devices, figure in BENCHMARKS:
+        if args.only and args.only not in mod + " ".join(extra):
+            continue
+        tag = mod.split(".")[-1] + ("_" + "_".join(
+            a.strip("-") for a in extra) if extra else "")
+        print(f"\n=== {tag}  [{figure}]  ({devices} devices) ===", flush=True)
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+        env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+            env.get("PYTHONPATH", "")
+        t0 = time.time()
+        r = subprocess.run(
+            [sys.executable, "-m", mod, "--devices", str(devices), *extra],
+            capture_output=True, text=True, cwd=REPO, env=env, timeout=3600)
+        dur = time.time() - t0
+        sys.stdout.write(r.stdout)
+        if r.returncode != 0:
+            failures += 1
+            print(f"[FAIL] {tag} rc={r.returncode}\n{r.stderr[-2000:]}",
+                  flush=True)
+        else:
+            print(f"[ok] {tag} in {dur:.0f}s", flush=True)
+            with open(os.path.join(args.out, tag + ".csv"), "w") as f:
+                f.write(r.stdout)
+    print(f"\nbenchmarks done; failures={failures}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

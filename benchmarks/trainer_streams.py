@@ -1,0 +1,55 @@
+"""Trainer-level VCI stream scaling — the paper's message-rate claim
+exercised through the REAL training API (not a microbenchmark).
+
+``make_train_step(comm="vci", num_streams=K, progress=...)`` buckets the
+gradient pytree onto K CommContexts; this sweeps K and the progress model
+and reports the compiled step's collective structure + wall clock. The
+paper's story at this level: serialized streams (global progress) keep
+K chained reductions; independent streams let XLA combine/overlap them.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from benchmarks.common import CSV, block, mesh_1d, time_fn
+from repro.configs import get_config
+from repro.data.pipeline import synthetic_batch
+from repro.launch.roofline import collective_critical_depth
+from repro.train.trainer import make_train_step, train_state_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8)
+    args = ap.parse_args()
+    mesh = mesh_1d(args.devices)
+    cfg = get_config("olmo-1b-smoke")
+    batch = synthetic_batch(cfg, 2 * mesh.size, 32, seed=0)
+    state = train_state_init(cfg, jax.random.PRNGKey(0))
+
+    csv = CSV("trainer_vci_streams")
+    for progress in ("global", "hybrid", "per_vci"):
+        for streams in (1, 2, 4, 8):
+            step = make_train_step(cfg, mesh=mesh, comm="vci",
+                                   num_streams=streams,
+                                   num_vcis=streams + 1,
+                                   progress=progress, token_impl="data")
+            with jax.set_mesh(mesh):
+                jitted = jax.jit(step)
+                compiled = jitted.lower(state, batch).compile()
+                hlo = compiled.as_text()
+                jitted(state, batch)
+                t = time_fn(lambda: block(jitted(state, batch)), reps=5)
+            d = collective_critical_depth(hlo)
+            csv.add(progress=progress, streams=streams,
+                    ms_per_step=t["median_s"] * 1e3,
+                    collectives=d["collective_count"],
+                    critical_depth=d["critical_depth"])
+    csv.dump()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Application example — §6.3 BSPMM get-compute-update with the
+accumulate-ordering hint.
+
+Block-sparse matmul across devices: workers Get remote A/B tiles, multiply
+locally, and Accumulate C tiles into a shared window. Demonstrates the
+paper's §6.3 finding end-to-end: ``accumulate_ordering="none"`` lets the
+library run accumulates on parallel streams while keeping the SAME numeric
+result (the reduction is commutative).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/bspmm_accumulate.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.collectives import CommRuntime
+from repro.core.comm import CommWorld
+from repro.launch.roofline import collective_critical_depth
+
+TILE = 64
+WORKERS = 4
+
+
+def main():
+    devs = jax.devices()
+    n = min(len(devs), 8)
+    if n < 2:
+        print("needs >=2 devices; run with XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8")
+        return
+    mesh = Mesh(np.array(devs[:n]), ("data",))
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def make(ordering):
+        def step(a_tiles, b_tiles):
+            world = CommWorld(num_vcis=WORKERS + 1)
+            rt = CommRuntime(world, progress="hybrid",
+                             join_every=4 * WORKERS, token_impl="data")
+            getw = [world.create(f"g{w}", kind="rma") for w in range(WORKERS)]
+            cwin = world.create("C", kind="rma",
+                                accumulate_ordering=ordering)
+            c = jnp.zeros((TILE, TILE), jnp.float32)
+            for w in range(WORKERS):
+                a = rt.get(a_tiles[w], getw[w], axis="data", perm=perm)
+                b = rt.get(b_tiles[w], getw[w], axis="data", perm=perm)
+                c = c + rt.accumulate(a @ b, cwin, axis="data")
+            return rt.barrier(c)
+        return jax.jit(jax.shard_map(
+            step, mesh=mesh, in_specs=(P(None, None, None),) * 2,
+            out_specs=P(None, None), check_vma=False))
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(WORKERS, TILE, TILE)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(WORKERS, TILE, TILE)), jnp.float32)
+
+    results = {}
+    for ordering in ("rar", "none"):
+        f = make(ordering)
+        hlo = f.lower(a, b).compile().as_text()
+        d = collective_critical_depth(hlo)
+        results[ordering] = (np.asarray(f(a, b)), d)
+        print(f"ordering={ordering!r}: collective critical depth "
+              f"{d['critical_depth']:.0f}, parallelism {d['parallelism']:.2f}")
+
+    np.testing.assert_allclose(results["rar"][0], results["none"][0],
+                               rtol=1e-5)
+    assert results["none"][1]["critical_depth"] \
+        <= results["rar"][1]["critical_depth"]
+    print("OK — relaxed ordering shortens the accumulate chain, values equal")
+
+
+if __name__ == "__main__":
+    main()

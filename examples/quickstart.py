@@ -1,0 +1,47 @@
+"""Quickstart: the public API in ~60 lines.
+
+1. Pick an assigned architecture (reduced -smoke variant for CPU).
+2. Train a few steps with the paper's VCI-bucketed gradient communication.
+3. Serve a few tokens from the trained model.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import synthetic_batch
+from repro.models.transformer import init_params
+from repro.optim.schedule import cosine_schedule
+from repro.serve.engine import Request, ServeEngine
+from repro.train.trainer import make_train_step, train_state_init
+
+
+def main():
+    # --- the model zoo: 10 assigned architectures, one config each --------
+    cfg = get_config("gemma-2b-smoke")   # reduced same-family variant
+    print(f"model: {cfg.name} ({cfg.family}), "
+          f"{cfg.param_count()/1e6:.1f}M params")
+
+    # --- train -------------------------------------------------------------
+    state = train_state_init(cfg, jax.random.PRNGKey(0))
+    lr = lambda s: cosine_schedule(s, peak=1e-3, warmup_steps=5,
+                                   total_steps=30)
+    step = jax.jit(make_train_step(cfg, lr_fn=lr))
+    for i in range(30):
+        batch = synthetic_batch(cfg, batch=8, seq=64, seed=0, step=i)
+        state, metrics = step(state, batch)
+        if (i + 1) % 10 == 0:
+            print(f"  step {i+1:3d}  loss {float(metrics['loss']):.4f}")
+
+    # --- serve -------------------------------------------------------------
+    engine = ServeEngine(cfg, state.params, batch_size=4, max_len=128)
+    prompts = [Request(prompt=np.arange(16, dtype=np.int32) % cfg.vocab_size,
+                       max_new_tokens=12) for _ in range(4)]
+    for i, r in enumerate(engine.generate(prompts)):
+        print(f"  generated[{i}]: {r.generated.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

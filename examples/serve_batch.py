@@ -1,0 +1,49 @@
+"""Application example — batched serving across architecture families.
+
+Prefill + iterative decode for a dense GQA model, an attention-free SSM and
+the multi-codebook audio model, through the same ServeEngine API.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.transformer import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+def demo(arch: str, prompt_len=16, new=16, nreq=4):
+    cfg = get_config(arch + "-smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, batch_size=2, max_len=128)
+    rng = np.random.default_rng(0)
+    shape = ((cfg.num_codebooks, prompt_len) if cfg.modality == "audio"
+             else (prompt_len,))
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, shape,
+                                        dtype=np.int32),
+                    max_new_tokens=new) for _ in range(nreq)]
+    t0 = time.time()
+    done = engine.generate(reqs)
+    dt = time.time() - t0
+    n_tok = sum(r.generated.shape[-1] * (r.generated.shape[0]
+                if r.generated.ndim > 1 else 1) for r in done)
+    print(f"  {arch:16s} [{cfg.family:6s}] {len(done)} requests, "
+          f"{n_tok} tokens, {dt:.2f}s")
+    return done
+
+
+def main():
+    print("batched serving across families:")
+    demo("yi-9b")           # dense GQA, full KV cache
+    demo("mamba2-780m")     # SSM: O(1) recurrent state
+    demo("zamba2-7b")       # hybrid: SSM + shared-attention KV sites
+    demo("musicgen-large")  # audio: 4 codebook streams per step
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

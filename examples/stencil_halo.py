@@ -1,0 +1,96 @@
+"""Application example — §6.1 stencil halo exchange with VCI streams.
+
+A 2D Jacobi iteration on a device grid: each device owns a block, halo
+rows/columns travel over four independent CommContexts (the paper's odd/even
+communicator sets collapse to per-direction contexts on a device grid).
+Convergence is verified against the single-device reference.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/stencil_halo.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.collectives import CommRuntime
+from repro.core.comm import CommWorld
+
+ROWS = COLS = 2
+BLOCK = 32
+STEPS = 50
+
+
+def perms():
+    def at(r, c):
+        return r * COLS + c
+    return {
+        "n": [(at(r, c), at((r - 1) % ROWS, c)) for r in range(ROWS)
+              for c in range(COLS)],
+        "s": [(at(r, c), at((r + 1) % ROWS, c)) for r in range(ROWS)
+              for c in range(COLS)],
+        "w": [(at(r, c), at(r, (c - 1) % COLS)) for r in range(ROWS)
+              for c in range(COLS)],
+        "e": [(at(r, c), at(r, (c + 1) % COLS)) for r in range(ROWS)
+              for c in range(COLS)],
+    }
+
+
+def jacobi_step(u, rt, ctxs, pm):
+    halos = {"n": u[:1, :], "s": u[-1:, :], "w": u[:, :1], "e": u[:, -1:]}
+    recv = {d: rt.sendrecv(h, ctxs[d], axis=("y", "x"), perm=pm[d])
+            for d, h in halos.items()}
+    up = jnp.concatenate([recv["s"], u[:-1, :]], axis=0)
+    dn = jnp.concatenate([u[1:, :], recv["n"]], axis=0)
+    lf = jnp.concatenate([recv["e"], u[:, :-1]], axis=1)
+    rg = jnp.concatenate([u[:, 1:], recv["w"]], axis=1)
+    return 0.25 * (up + dn + lf + rg)
+
+
+def reference(u0, steps):
+    u = u0
+    for _ in range(steps):
+        up = jnp.roll(u, 1, axis=0)
+        dn = jnp.roll(u, -1, axis=0)
+        lf = jnp.roll(u, 1, axis=1)
+        rg = jnp.roll(u, -1, axis=1)
+        u = 0.25 * (up + dn + lf + rg)
+    return u
+
+
+def main():
+    devs = jax.devices()
+    if len(devs) < ROWS * COLS:
+        print(f"needs {ROWS*COLS} devices; run with "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count={ROWS*COLS}")
+        return
+    mesh = Mesh(np.array(devs[: ROWS * COLS]).reshape(ROWS, COLS), ("y", "x"))
+    pm = perms()
+
+    def run(u):
+        world = CommWorld(num_vcis=8)
+        rt = CommRuntime(world, progress="hybrid", join_every=16,
+                         token_impl="data")
+        ctxs = {d: world.create(f"halo_{d}") for d in "nswe"}
+        for _ in range(STEPS):
+            u = jacobi_step(u, rt, ctxs, pm)
+        return rt.barrier(u)
+
+    f = jax.jit(jax.shard_map(run, mesh=mesh, in_specs=P("y", "x"),
+                              out_specs=P("y", "x"), check_vma=False))
+
+    rng = np.random.default_rng(0)
+    u0 = jnp.asarray(rng.normal(size=(ROWS * BLOCK, COLS * BLOCK)),
+                     jnp.float32)
+    out = f(u0)
+    ref = reference(u0, STEPS)
+    err = float(jnp.abs(out - ref).max())
+    print(f"jacobi {STEPS} steps on {ROWS}x{COLS} devices: "
+          f"max|distributed - reference| = {err:.2e}")
+    assert err < 1e-4, "halo exchange incorrect"
+    print("OK — VCI-stream halo exchange matches the single-device solver")
+
+
+if __name__ == "__main__":
+    main()

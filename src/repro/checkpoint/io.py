@@ -1,0 +1,95 @@
+"""Checkpointing: per-leaf .npy files + a JSON manifest.
+
+Layout:
+    <dir>/step_<N>/manifest.json       tree structure + dtypes + metadata
+    <dir>/step_<N>/leaf_<i>.npy        one file per pytree leaf
+
+Restore reshards: pass ``shardings`` (a matching pytree of NamedSharding)
+and each leaf is device_put straight to its target layout. Loads are
+host-local; multi-host restore maps each host's addressable shards (the
+manifest stores the global shape).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = []
+    for kp, _ in flat:
+        paths.append(_SEP.join(_key_str(k) for k in kp))
+    return paths, [v for _, v in flat], treedef
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"[{k.idx}]"
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    metadata: Optional[dict] = None) -> str:
+    out = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(out, exist_ok=True)
+    paths, leaves, _ = _flatten_with_paths(tree)
+    manifest = {"step": step, "metadata": metadata or {}, "leaves": []}
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(out, fname), arr)
+        manifest["leaves"].append({
+            "path": p, "file": fname, "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+        })
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.match(r"step_(\d+)$", d))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, like: Any,
+                    shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of ``like`` (values ignored), optionally
+    device_put onto ``shardings`` (same treedef)."""
+    src = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+    paths, like_leaves, treedef = _flatten_with_paths(like)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    if set(paths) != set(by_path):
+        missing = set(paths) - set(by_path)
+        extra = set(by_path) - set(paths)
+        raise ValueError(f"checkpoint tree mismatch: missing={missing} extra={extra}")
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(paths))
+    leaves = []
+    for p, lk, sh in zip(paths, like_leaves, shard_leaves):
+        arr = np.load(os.path.join(src, by_path[p]["file"]))
+        if tuple(arr.shape) != tuple(lk.shape):
+            raise ValueError(f"shape mismatch at {p}: {arr.shape} vs {lk.shape}")
+        arr = arr.astype(lk.dtype)
+        leaves.append(jax.device_put(arr, sh) if sh is not None
+                      else jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

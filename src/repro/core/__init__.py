@@ -1,0 +1,37 @@
+"""repro.core — the paper's contribution: VCIs for JAX/TPU.
+
+Public API:
+    VCIPool, VCI              — the interface pool (paper §4.2)
+    CommWorld, CommContext    — communicator/window analogues (§2)
+    CommRuntime, Request      — stream-tagged collectives (§4.3)
+    ProgressEngine            — global | per_vci | hybrid progress (§4.1/4.3)
+    plan_buckets, reduce_gradients — gradient→VCI bucketing (training integration)
+"""
+
+from repro.core.bucketing import (
+    Bucket,
+    BucketPlan,
+    TILE,
+    pack_bucket,
+    plan_buckets,
+    reduce_gradients,
+    unpack_bucket,
+)
+from repro.core.collectives import CommRuntime, Request
+from repro.core.comm import CommContext, CommWorld
+from repro.core.progress import (
+    PROGRESS_MODES,
+    ProgressEngine,
+    after,
+    fresh_token,
+    join_tokens,
+    token_after,
+)
+from repro.core.vci import POLICIES, VCI, VCIPool
+
+__all__ = [
+    "Bucket", "BucketPlan", "TILE", "pack_bucket", "plan_buckets",
+    "reduce_gradients", "unpack_bucket", "CommRuntime", "Request",
+    "CommContext", "CommWorld", "PROGRESS_MODES", "ProgressEngine", "after",
+    "fresh_token", "join_tokens", "token_after", "POLICIES", "VCI", "VCIPool",
+]

@@ -1,0 +1,150 @@
+"""Stream-tagged collectives: the VCI-aware communication runtime (§4.3).
+
+Used inside ``shard_map`` regions (manual mesh axes). Every operation is
+issued on a :class:`~repro.core.comm.CommContext`; the runtime
+
+1. *enters* the context's VCI stream — chains the payload on the stream's
+   ordering token (critical-section acquisition),
+2. issues the underlying ``jax.lax`` collective,
+3. *completes* — advances the stream token past the result (release), and
+4. under ``hybrid`` progress performs a global round every K issues.
+
+Operations on different VCIs carry no mutual dependency: XLA is free to
+schedule them concurrently — the TPU realization of the paper's parallel
+communication streams. Operations landing on the same VCI (same context, or
+distinct contexts that collided in the pool — Fig. 17) serialize through the
+shared token.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.comm import CommContext, CommWorld
+from repro.core.progress import ProgressEngine
+
+AxisName = Union[str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class Request:
+    """Nonblocking-operation handle (MPI_Request analogue)."""
+
+    value: jax.Array
+    ctx: CommContext
+
+
+class CommRuntime:
+    """Trace-time communication runtime bound to a CommWorld's contexts."""
+
+    def __init__(
+        self,
+        world: Optional[CommWorld] = None,
+        *,
+        progress: str = "hybrid",
+        join_every: int = 8,
+        token_impl: str = "barrier",
+    ):
+        self.world = world or CommWorld()
+        self.engine = ProgressEngine(
+            mode=progress, join_every=join_every, token_impl=token_impl)
+
+    # -- plumbing ------------------------------------------------------
+    def _issue(self, ctx: CommContext, x, op, *, chain: bool = True):
+        if chain:
+            x = self.engine.enter(ctx.vci.index, x)
+        out = op(x)
+        self.engine.complete(ctx.vci.index, out)
+        return out
+
+    # -- two-sided (communicator) ops -----------------------------------
+    def sendrecv(self, x, ctx: CommContext, *, axis: AxisName,
+                 perm: Sequence[Tuple[int, int]]) -> jax.Array:
+        """Pairwise exchange (Isend/Irecv pair) along ``axis``: each (src,
+        dst) in ``perm`` ships this shard's ``x`` from src to dst."""
+        return self._issue(ctx, x, partial(lax.ppermute, axis_name=axis, perm=perm))
+
+    def isend_recv(self, x, ctx: CommContext, *, axis: AxisName,
+                   perm: Sequence[Tuple[int, int]]) -> Request:
+        return Request(self.sendrecv(x, ctx, axis=axis, perm=perm), ctx)
+
+    def wait(self, req: Request) -> jax.Array:
+        """MPI_Wait: consume the value ordered after its stream token."""
+        return self.engine._after(req.value, self.engine.token(req.ctx.vci.index))
+
+    def all_reduce(self, x, ctx: CommContext, *, axis: AxisName) -> jax.Array:
+        return self._issue(ctx, x, partial(lax.psum, axis_name=axis))
+
+    def all_gather(self, x, ctx: CommContext, *, axis: AxisName,
+                   gather_axis: int = 0, tiled: bool = True) -> jax.Array:
+        return self._issue(
+            ctx, x, partial(lax.all_gather, axis_name=axis, axis=gather_axis,
+                            tiled=tiled))
+
+    def reduce_scatter(self, x, ctx: CommContext, *, axis: AxisName,
+                       scatter_axis: int = 0) -> jax.Array:
+        return self._issue(
+            ctx, x, partial(lax.psum_scatter, axis_name=axis,
+                            scatter_dimension=scatter_axis, tiled=True))
+
+    def all_to_all(self, x, ctx: CommContext, *, axis: AxisName,
+                   split_axis: int, concat_axis: int) -> jax.Array:
+        return self._issue(
+            ctx, x, partial(lax.all_to_all, axis_name=axis,
+                            split_axis=split_axis, concat_axis=concat_axis,
+                            tiled=True))
+
+    # -- one-sided (window) ops -----------------------------------------
+    def get(self, x, ctx: CommContext, *, axis: AxisName,
+            perm: Sequence[Tuple[int, int]]) -> jax.Array:
+        """MPI_Get analogue: fetch the owner's shard (hardware-progressed on
+        TPU ICI, like the paper's Mellanox case). Get/Put carry no matching
+        order, so unordered windows issue them un-chained."""
+        if ctx.kind != "rma":
+            raise ValueError("get() requires an rma context (window)")
+        op = partial(lax.ppermute, axis_name=axis, perm=perm)
+        return self._issue(ctx, x, op, chain=ctx.ordered)
+
+    def put(self, x, ctx: CommContext, *, axis: AxisName,
+            perm: Sequence[Tuple[int, int]]) -> jax.Array:
+        if ctx.kind != "rma":
+            raise ValueError("put() requires an rma context (window)")
+        op = partial(lax.ppermute, axis_name=axis, perm=perm)
+        return self._issue(ctx, x, op, chain=ctx.ordered)
+
+    def accumulate(self, x, ctx: CommContext, *, axis: AxisName) -> jax.Array:
+        """MPI_Accumulate analogue: commutative reduction into a window.
+
+        Default ordering ("rar") chains accumulates on the window's stream —
+        MPI-3.1 requires program order for same-source/same-location
+        accumulates (§2.2). With ``accumulate_ordering="none"`` (the §6.3
+        hint) accumulates are issued UN-chained and may proceed in parallel —
+        restoring endpoint-equivalent performance for BSPMM.
+        """
+        if ctx.kind != "rma":
+            raise ValueError("accumulate() requires an rma context (window)")
+        chain = ctx.accumulate_ordering != "none"
+        return self._issue(ctx, x, partial(lax.psum, axis_name=axis), chain=chain)
+
+    # -- synchronization ------------------------------------------------
+    def flush(self, x, ctx: CommContext):
+        """MPI_Win_flush: order ``x`` after the window's outstanding ops.
+
+        Completion of a flush may require *other* streams to progress
+        (Fig. 9's RMA deadlock): under ``hybrid`` progress the engine's
+        periodic global rounds provide that; under pure ``per_vci`` progress
+        this orders only on the window's own stream — fast, and exactly as
+        starvation-prone as the paper warns.
+        """
+        return self.engine._after(x, self.engine.token(ctx.vci.index))
+
+    def barrier(self, x):
+        """MPI_Barrier-ish: order ``x`` after ALL streams (global progress)."""
+        self.engine.global_round()
+        return self.engine.drain(x)

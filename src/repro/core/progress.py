@@ -1,0 +1,173 @@
+"""Ordering tokens and progress models (paper §4.1, §4.3).
+
+MPI's thread-safety problem translates to XLA as a *scheduling-freedom*
+problem: which communication ops may the compiler reorder, interleave, and
+overlap? A critical section forbids reordering of the ops it guards; we
+reproduce that with **ordering tokens** threaded through
+``jax.lax.optimization_barrier`` — a zero-copy HLO construct that creates a
+scheduling dependency without moving payload bytes.
+
+* ``global``   — ONE token guards every communication op: the paper's global
+                 critical section. All comm serializes, nothing overlaps.
+* ``per_vci``  — one token per VCI: the paper's per-VCI locks with *pure*
+                 per-VCI progress. Fastest, but provides no cross-stream
+                 completion guarantee — the analogue of the Fig. 9 deadlock
+                 is unbounded completion skew between streams.
+* ``hybrid``   — per-VCI tokens plus a *global progress round* (a join of
+                 all stream tokens) every ``join_every`` issued operations:
+                 the paper's correct-and-fast hybrid model (§4.3).
+
+The token mechanics:
+
+``after(x, tok)``      — returns ``x`` such that every consumer of the result
+                         is scheduled after ``tok`` is available.
+``token_after(tok,x)`` — returns a new token that becomes available only
+                         after ``x`` is computed.
+
+Both are a single ``optimization_barrier`` over a tuple: the barrier
+instruction consumes all operands and produces all results, so each result
+transitively depends on every operand.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PROGRESS_MODES = ("global", "per_vci", "hybrid")
+TOKEN_IMPLS = ("barrier", "data")
+
+GLOBAL_STREAM = -1  # token key used by the `global` mode
+
+
+def fresh_token() -> jax.Array:
+    """A new, dependency-free ordering token (trace-time constant)."""
+    return jnp.zeros((), dtype=jnp.float32)
+
+
+def after(x, token: jax.Array):
+    """Order: ``x``'s consumers run after ``token`` is available."""
+    x, _ = lax.optimization_barrier((x, token))
+    return x
+
+
+def token_after(token: jax.Array, x) -> jax.Array:
+    """A token that completes only after ``x`` (and ``token``)."""
+    token, _ = lax.optimization_barrier((token, x))
+    return token
+
+
+# --- "data" token impl -------------------------------------------------------
+# XLA's CPU pipeline elides optimization-barriers before the collective
+# combiner/scheduler run, erasing the stream structure we are studying. The
+# "data" implementation instead threads the dependency through payload
+# values: the token is ``first_element * 0.0`` of the guarded result (XLA
+# cannot fold float ``x*0`` because of NaN/Inf semantics) and is *added* to
+# the next payload. Numerically a no-op for finite values; structurally an
+# un-removable dependency edge. Used by the CPU wall-clock benchmarks;
+# ``barrier`` remains the default for TPU-target lowering (zero-copy).
+
+def after_data(x, token: jax.Array):
+    return jax.tree_util.tree_map(lambda a: a + token.astype(a.dtype), x)
+
+
+def token_after_data(token: jax.Array, x) -> jax.Array:
+    leaf = jax.tree_util.tree_leaves(x)[0]
+    probe = leaf.reshape(-1)[0].astype(jnp.float32) * 0.0
+    return token + probe
+
+
+def join_tokens(tokens: Tuple[jax.Array, ...]) -> Tuple[jax.Array, ...]:
+    """Global progress round: every returned token depends on all inputs."""
+    if len(tokens) <= 1:
+        return tuple(tokens)
+    return tuple(lax.optimization_barrier(tuple(tokens)))
+
+
+@dataclass
+class ProgressEngine:
+    """Trace-time token bookkeeping for one traced step.
+
+    Mirrors the MPICH progress engine: each issued operation enters the
+    critical section of its stream (is chained on the stream token), and on
+    completion updates that token. ``hybrid`` additionally performs one
+    global round every ``join_every`` per-stream issues — the paper performs
+    one round of global progress after a number of unsuccessful per-VCI
+    polls; trace-time op count is the static analogue of poll count.
+    """
+
+    mode: str = "hybrid"
+    join_every: int = 8
+    token_impl: str = "barrier"   # "barrier" (TPU-faithful) | "data" (CPU-proof)
+    _tokens: Dict[int, jax.Array] = field(default_factory=dict)
+    _issued_since_join: int = 0
+    issued: int = 0
+    joins: int = 0
+
+    def __post_init__(self):
+        if self.mode not in PROGRESS_MODES:
+            raise ValueError(f"mode {self.mode!r} not in {PROGRESS_MODES}")
+        if self.token_impl not in TOKEN_IMPLS:
+            raise ValueError(f"token_impl {self.token_impl!r} not in {TOKEN_IMPLS}")
+
+    def _after(self, x, token):
+        return after_data(x, token) if self.token_impl == "data" else after(x, token)
+
+    def _token_after(self, token, x):
+        if self.token_impl == "data":
+            return token_after_data(token, x)
+        return token_after(token, x)
+
+    # ------------------------------------------------------------------
+    def _key(self, vci_index: int) -> int:
+        return GLOBAL_STREAM if self.mode == "global" else vci_index
+
+    def token(self, vci_index: int) -> jax.Array:
+        key = self._key(vci_index)
+        if key not in self._tokens:
+            self._tokens[key] = fresh_token()
+        return self._tokens[key]
+
+    def enter(self, vci_index: int, payload):
+        """Chain ``payload`` on the stream's token (lock acquisition)."""
+        return self._after(payload, self.token(vci_index))
+
+    def complete(self, vci_index: int, result) -> None:
+        """Update the stream token after ``result`` (lock release)."""
+        key = self._key(vci_index)
+        self._tokens[key] = self._token_after(self.token(vci_index), result)
+        self.issued += 1
+        self._issued_since_join += 1
+        if self.mode == "hybrid" and self._issued_since_join >= self.join_every:
+            self.global_round()
+
+    def global_round(self) -> None:
+        """Join every live stream token (the hybrid global-progress round)."""
+        keys = sorted(self._tokens)
+        if self.token_impl == "data":
+            s = sum((self._tokens[k] for k in keys), start=fresh_token())
+            for k in keys:
+                self._tokens[k] = s
+        else:
+            joined = join_tokens(tuple(self._tokens[k] for k in keys))
+            for k, t in zip(keys, joined):
+                self._tokens[k] = t
+        self._issued_since_join = 0
+        self.joins += 1
+
+    def drain(self, x):
+        """Order ``x`` after ALL outstanding streams (MPI_Finalize/step end).
+
+        Without this, dead-code elimination could drop an un-consumed
+        stream's collectives entirely — the trace-time equivalent of exiting
+        before completing outstanding requests.
+        """
+        if not self._tokens:
+            return x
+        self.global_round()
+        any_key = next(iter(self._tokens))
+        return self._after(x, self._tokens[any_key])

@@ -1,0 +1,11 @@
+from repro.data.pipeline import (
+    PAD_LABEL,
+    batch_shardings,
+    batch_spec,
+    place_batch,
+    synthetic_batch,
+    synthetic_batches,
+)
+
+__all__ = ["PAD_LABEL", "batch_shardings", "batch_spec", "place_batch",
+           "synthetic_batch", "synthetic_batches"]

@@ -1,0 +1,122 @@
+"""Gradient-bucket packing — Pallas TPU (scalar prefetch).
+
+The paper's per-VCI request cache keeps each stream's staging memory
+private; the training-loop analogue packs a bucket's gradient shards into
+one flat, tile-aligned send buffer before the bucketed all-reduce
+(`repro.core.bucketing.pack_bucket` is the XLA path built from
+concatenates). For many small leaves the XLA path materializes one copy
+per concat operand; this kernel instead DMAs each destination tile
+straight from its source segment, driven by prefetched index tables (the
+same scalar-prefetch pattern as `moe_gather`).
+
+Layout contract: segments (leaf flats) sit at TILE-ALIGNED offsets in
+both the source arena and the destination buffer — the alignment the
+paper's "cache-line aware VCI" optimization prescribes (§4.3) and that
+``plan_buckets(align=TILE)`` produces. A destination tile therefore maps
+to exactly one source segment; tail tiles zero-fill past ``valid``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE = 8 * 128
+
+
+def build_tile_tables(src_off, dst_off, sizes, padded_size: int,
+                      tile: int = TILE) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side: per-destination-tile (source block index, valid count).
+
+    ``src_off``/``dst_off`` must be tile-aligned (see module docstring).
+    Returns (block: int32[n_tiles], valid: int32[n_tiles]).
+    """
+    assert padded_size % tile == 0
+    src_off = np.asarray(src_off)
+    dst_off = np.asarray(dst_off)
+    sizes = np.asarray(sizes)
+    assert (src_off % tile == 0).all(), "source segments must be tile-aligned"
+    assert (dst_off % tile == 0).all(), "dest segments must be tile-aligned"
+    n_tiles = padded_size // tile
+    block = np.zeros((n_tiles,), np.int32)
+    valid = np.zeros((n_tiles,), np.int32)
+    order = np.argsort(dst_off)
+    for i in order:
+        n_seg_tiles = -(-int(sizes[i]) // tile)
+        t0 = int(dst_off[i]) // tile
+        for k in range(n_seg_tiles):
+            block[t0 + k] = int(src_off[i]) // tile + k
+            valid[t0 + k] = min(tile, int(sizes[i]) - k * tile)
+    return block, valid
+
+
+def _kernel(block_ref, valid_ref, src_ref, out_ref, *, tile: int):
+    t = pl.program_id(0)
+    v = valid_ref[t]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (tile,), 0)
+    out_ref[...] = jnp.where(idx < v, src_ref[...], 0.0).astype(out_ref.dtype)
+
+
+def bucket_pack_pallas(src: jax.Array, block: jax.Array, valid: jax.Array,
+                       padded_size: int, *, tile: int = TILE,
+                       interpret: bool = False) -> jax.Array:
+    """src: flat tile-aligned arena; returns the (padded_size,) packed
+    buffer. ``block``/``valid`` from :func:`build_tile_tables`; the
+    BlockSpec index_map consumes the prefetched ``block`` table so each
+    grid step DMAs exactly one source tile."""
+    assert padded_size % tile == 0
+    assert src.shape[0] % tile == 0
+    n_tiles = padded_size // tile
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile,),
+                         lambda t, block_ref, valid_ref: (block_ref[t],)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda t, b, v: (t,)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, tile=tile),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((padded_size,), src.dtype),
+        interpret=interpret,
+    )(block, valid, src)
+
+
+def bucket_pack_ref(src, block, valid, padded_size: int,
+                    tile: int = TILE) -> jax.Array:
+    """Pure-jnp oracle."""
+    n_tiles = padded_size // tile
+    out = jnp.zeros((padded_size,), src.dtype)
+    for t in range(n_tiles):
+        b = int(block[t])
+        v = int(valid[t])
+        seg = jax.lax.dynamic_slice(src, (b * tile,), (tile,))
+        idx = jnp.arange(tile)
+        seg = jnp.where(idx < v, seg, 0.0)
+        out = jax.lax.dynamic_update_slice(out, seg.astype(src.dtype),
+                                           (t * tile,))
+    return out
+
+
+def arena_from_leaves(leaves, tile: int = TILE):
+    """Lay leaves into a tile-aligned flat arena; returns (arena, offsets)."""
+    offs = []
+    parts = []
+    cur = 0
+    for leaf in leaves:
+        flat = jnp.ravel(leaf)
+        offs.append(cur)
+        pad = (-flat.shape[0]) % tile
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        parts.append(flat)
+        cur += flat.shape[0]
+    return jnp.concatenate(parts), np.array(offs, np.int32)

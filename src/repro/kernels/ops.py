@@ -1,0 +1,114 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret=None`` auto-selects: compiled Pallas on TPU backends, interpret
+mode elsewhere (this container is CPU-only, so tests exercise interpret
+mode; the kernels are TPU-target artifacts).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bucket_pack import (
+    arena_from_leaves,
+    bucket_pack_pallas,
+    bucket_pack_ref,
+    build_tile_tables,
+)
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.moe_gather import row_gather_pallas, row_gather_ref
+from repro.kernels.ssd_scan import ssd_chunk_pallas
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    """q: (B,H,Sq,hd); k/v: (B,KV,Skv,hd) -> (B,H,Sq,hd)."""
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked(x, dt, A, B, C, *, chunk: int, interpret: Optional[bool] = None):
+    """Full blocked SSD using the Pallas intra-chunk kernel + jnp inter-chunk
+    associative scan. Same contract as ``repro.models.ssm.ssd_chunked`` with
+    no initial state. x: (b,s,h,p); dt: (b,s,h); A: (h,); B/C: (b,s,g,n)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0
+    nc = s // chunk
+    rep = h // g
+    f32 = jnp.float32
+
+    dA = dt.astype(f32) * A.astype(f32)
+    cum = dA.reshape(b, nc, chunk, h).cumsum(axis=2)
+
+    # flatten (b, h) -> bh for the kernel grid, broadcasting B/C to heads
+    def flat(t):  # (b, nc, c, h, ...) -> (b*h, nc, c, ...)
+        perm = (0, 3, 1, 2) + tuple(range(4, t.ndim))
+        t = t.transpose(perm)
+        return t.reshape((b * h,) + t.shape[2:])
+
+    xs = flat(x.reshape(b, nc, chunk, h, p))
+    dts = flat(dt.astype(f32).reshape(b, nc, chunk, h))
+    cums = flat(cum.transpose(0, 1, 2, 3))  # (b,nc,c,h) -> flat
+    Bh = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3)
+    Ch = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3)
+    Bs, Cs = flat(Bh), flat(Ch)
+
+    y_intra, st_loc = ssd_chunk_pallas(xs, dts, cums, Bs, Cs,
+                                       interpret=_auto_interpret(interpret))
+
+    # inter-chunk associative scan (jnp — O(nc * n * p), negligible)
+    a = jnp.exp(cums[:, :, -1, None, None])                    # (bh,nc,1,1)
+
+    def op(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 * a2, a2 * s1 + s2
+
+    _, acc = jax.lax.associative_scan(op, (a, st_loc), axis=1)
+    s_prev = jnp.concatenate(
+        [jnp.zeros_like(acc[:, :1]), acc[:, :-1]], axis=1)     # (bh,nc,n,p)
+    final_state = acc[:, -1]
+
+    decay_in = jnp.exp(cums)                                   # (bh,nc,c)
+    y_inter = jnp.einsum("zncq,znqp,znc->zncp", Cs, s_prev, decay_in)
+
+    y = (y_intra + y_inter).reshape(b, h, nc * chunk, p).transpose(0, 2, 1, 3)
+    fs = final_state.reshape(b, h, n, p)
+    return y.astype(x.dtype), fs
+
+
+@partial(jax.jit, static_argnames=("block_d", "interpret"))
+def row_gather(src, idx, *, block_d: int = 512,
+               interpret: Optional[bool] = None):
+    """out[i] = src[idx[i]] (zeros where idx < 0)."""
+    return row_gather_pallas(src, idx, block_d=block_d,
+                             interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("padded_size", "tile", "interpret"))
+def bucket_pack(src, block, valid, *, padded_size: int, tile: int = 1024,
+                interpret: Optional[bool] = None):
+    """Pack tile-aligned gradient segments into one flat send buffer."""
+    return bucket_pack_pallas(src, block, valid, padded_size, tile=tile,
+                              interpret=_auto_interpret(interpret))
+
+
+__all__ = ["arena_from_leaves", "bucket_pack", "bucket_pack_ref",
+           "build_tile_tables", "flash_attention", "row_gather",
+           "row_gather_ref", "ssd_chunked"]

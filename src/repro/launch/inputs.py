@@ -1,0 +1,174 @@
+"""Abstract inputs + shardings for every (arch x input-shape x mesh) combo.
+
+Everything here is ``ShapeDtypeStruct``-based (the shannon/kernels pattern):
+weak-type-correct, shardable, zero device allocation — the dry-run lowers
+and compiles against these stand-ins.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.data.pipeline import batch_spec
+from repro.dist.sharding import batch_axes, data_axes, param_specs
+from repro.models.transformer import init_cache, init_params
+from repro.optim.adamw import AdamWState
+from repro.train.trainer import TrainState
+
+
+def _ns(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def _tree_struct(f, *args):
+    return jax.eval_shape(f, *args)
+
+
+# ---------------------------------------------------------------------------
+# parameters / train state
+# ---------------------------------------------------------------------------
+
+def params_struct(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return _tree_struct(lambda k: init_params(cfg, k), key)
+
+
+def params_shardings(cfg: ModelConfig, mesh: Mesh):
+    specs = param_specs(cfg, mesh)
+    struct = params_struct(cfg)
+    # verify the spec tree covers the param tree exactly
+    sd = jax.tree_util.tree_structure(struct)
+    ss = jax.tree_util.tree_structure(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    if sd != ss:
+        raise ValueError(
+            f"param spec tree mismatch for {cfg.name}:\n{sd}\nvs\n{ss}")
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def train_state_struct(cfg: ModelConfig) -> TrainState:
+    p = params_struct(cfg)
+    mdt = jnp.dtype(cfg.optimizer_dtype)
+    mom = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, mdt), p)
+    return TrainState(
+        params=p,
+        opt=AdamWState(m=mom, v=jax.tree_util.tree_map(lambda x: x, mom),
+                       count=jax.ShapeDtypeStruct((), jnp.int32)),
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh) -> TrainState:
+    ps = params_shardings(cfg, mesh)
+    rep = NamedSharding(mesh, P())
+    return TrainState(
+        params=ps,
+        opt=AdamWState(m=ps, v=jax.tree_util.tree_map(lambda x: x, ps),
+                       count=rep),
+        step=rep,
+    )
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+def batch_struct_and_shardings(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    spec = batch_spec(cfg, shape, mesh)
+    dp = data_axes(mesh, cfg)
+    dpn = int(np.prod([mesh.shape[a] for a in dp]))
+
+    shardings = {}
+    for k, st in spec.items():
+        lead = dp if (st.shape[0] % dpn == 0 and st.shape[0] >= dpn) else None
+        shardings[k] = _ns(mesh, lead, *([None] * (len(st.shape) - 1)))
+    return spec, shardings
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+def cache_struct(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16):
+    return _tree_struct(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len, dtype=dtype))
+
+
+def cache_shardings(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    """Sharding rules for the stacked decode cache (leading L/site dim).
+
+    * batch over (pod, data) when it divides;
+    * KV heads over model when they divide, else sequence over model;
+    * long_500k (batch=1): sequence over ALL axes — single-stream decode has
+      no batch parallelism, the cache is the only shardable state.
+    """
+    dp = data_axes(mesh, cfg)
+    dpn = int(np.prod([mesh.shape[a] for a in dp]))
+    tp = mesh.shape.get("model", 1)
+    struct = cache_struct(cfg, shape)
+
+    def kv_spec(st):  # (L, B, S, KV, hd)
+        _, b, s, kv, _ = st.shape
+        if b % dpn == 0 and b >= dpn:
+            lead = dp
+            head = "model" if kv % tp == 0 else None
+            if head is None and s % tp == 0:
+                return P(None, lead, "model", None, None)
+            return P(None, lead, None, head, None)
+        # batch too small: shard sequence over everything that divides
+        seq_axes = tuple(dp) + ("model",)
+        total = dpn * tp
+        if s % total == 0:
+            return P(None, None, seq_axes, None, None)
+        if s % tp == 0:
+            return P(None, None, "model", None, None)
+        return P(None, None, None, None, None)
+
+    def ssm_conv_spec(st):  # (L, B, W-1, CH)
+        _, b, _, ch = st.shape
+        lead = dp if (b % dpn == 0 and b >= dpn) else None
+        return P(None, lead, None, "model" if ch % tp == 0 else None)
+
+    def ssm_ssd_spec(st):  # (L, B, H, N, P)
+        _, b, h, _, _ = st.shape
+        lead = dp if (b % dpn == 0 and b >= dpn) else None
+        return P(None, lead, "model" if h % tp == 0 else None, None, None)
+
+    def assign(path, st):
+        keys = tuple(str(getattr(k, "key", getattr(k, "name", k))) for k in path)
+        if st.shape == ():
+            return NamedSharding(mesh, P())
+        if "kv" in keys:
+            return NamedSharding(mesh, kv_spec(st))
+        if "conv" in keys:
+            return NamedSharding(mesh, ssm_conv_spec(st))
+        if "ssd" in keys:
+            return NamedSharding(mesh, ssm_ssd_spec(st))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(assign, struct)
+
+
+def decode_token_struct(cfg: ModelConfig, shape: InputShape):
+    b = shape.global_batch
+    if cfg.modality == "audio":
+        return jax.ShapeDtypeStruct((b, cfg.num_codebooks, 1), jnp.int32)
+    return jax.ShapeDtypeStruct((b, 1), jnp.int32)
+
+
+def decode_token_sharding(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    dp = data_axes(mesh, cfg)
+    dpn = int(np.prod([mesh.shape[a] for a in dp]))
+    b = shape.global_batch
+    lead = dp if (b % dpn == 0 and b >= dpn) else None
+    extra = 1 if cfg.modality == "audio" else 0
+    return _ns(mesh, lead, *([None] * (1 + extra)))

@@ -1,0 +1,128 @@
+"""Aggregate reports/dryrun/*.json into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir reports/dryrun]
+
+Emits (markdown): §Dry-run summary (per-device memory + collective schedule)
+and the §Roofline table (three terms, dominant, model-FLOPs ratio, and a
+what-would-move-it note per row).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def _fmt_t(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.1f}ms"
+    return f"{s*1e6:.0f}us"
+
+
+def _fmt_b(b) -> str:
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if b < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def suggestion(row: Dict) -> str:
+    dom = row["dominant"]
+    shape = row["shape"]
+    if dom == "compute":
+        if row.get("model_ratio", 1) < 0.5:
+            return "recompute waste: relax remat policy / recompute less"
+        return "compute-bound at high useful-FLOPs ratio: near roofline; " \
+               "try more chips or lower precision"
+    if dom == "memory":
+        if "decode" in shape or shape == "long_500k":
+            return "KV/state reads dominate: shrink cache dtype (int8/fp8), " \
+                   "or shard sequence further"
+        return "increase arithmetic intensity: larger per-chip batch/fusion"
+    # collective
+    if shape == "train_4k":
+        return "gradient/FSDP traffic: overlap collectives with compute, " \
+               "bigger buckets, or rebalance data-vs-model axes"
+    if "decode" in shape or shape == "long_500k":
+        return "TP all-reduces dominate tiny decode step: shrink model " \
+               "axis for decode or batch requests"
+    return "prefill TP traffic: overlap all-gathers with layer compute"
+
+
+def load(dir_: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="reports/dryrun")
+    ap.add_argument("--mesh", default=None, help="filter: 16x16 | 2x16x16")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    fails = [r for r in rows if r.get("status") != "ok"]
+
+    print(f"## Dry-run summary: {len(ok)} ok / {len(fails)} failed "
+          f"of {len(rows)} (arch x shape x mesh)\n")
+    if fails:
+        for r in fails:
+            print(f"- FAIL {r.get('requested_arch')} {r.get('shape')} "
+                  f"{r.get('mesh')}: {r.get('error')}")
+        print()
+
+    sel = [r for r in ok if args.mesh is None or r["mesh"] == args.mesh]
+    sel.sort(key=lambda r: (r["requested_arch"],
+                            SHAPE_ORDER.get(r["shape"], 9), r["mesh"]))
+
+    print("| arch | shape | mesh | compute | memory | collective | dominant "
+          "| MODEL/HLO | per-dev argbytes | coll. ops (count/depth) | "
+          "what moves the dominant term |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in sel:
+        mem = r.get("memory_per_chip") or {}
+        st = (r.get("collectives") or {}).get("_structure", {})
+        print(f"| {r['requested_arch']} | {r['shape']} | {r['mesh']} "
+              f"| {_fmt_t(r['t_compute_s'])} | {_fmt_t(r['t_memory_s'])} "
+              f"| {_fmt_t(r['t_collective_s'])} | **{r['dominant']}** "
+              f"| {r['model_ratio']:.2f} "
+              f"| {_fmt_b(mem.get('argument_bytes'))} "
+              f"| {st.get('collective_count', 0):.0f}/"
+              f"{st.get('critical_depth', 0):.0f} "
+              f"| {suggestion(r)} |")
+
+    # aggregate collective schedule
+    print("\n### Collective schedule (per-kind link-bytes, single-pod)\n")
+    agg: Dict[str, Dict[str, float]] = {}
+    for r in sel:
+        if r["mesh"] != "16x16":
+            continue
+        for kind, d in (r.get("collectives") or {}).items():
+            if kind.startswith("_"):
+                continue
+            a = agg.setdefault(kind, {"count": 0, "link_bytes": 0.0})
+            a["count"] += d["count"]
+            a["link_bytes"] += d["link_bytes"]
+    print("| kind | total ops | total link-bytes |")
+    print("|---|---|---|")
+    for kind, d in sorted(agg.items()):
+        print(f"| {kind} | {d['count']:.0f} | {_fmt_b(d['link_bytes'])} |")
+
+
+if __name__ == "__main__":
+    main()

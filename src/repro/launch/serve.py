@@ -1,0 +1,57 @@
+"""Serving driver: batched prefill + decode on any architecture.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b-smoke \
+        --requests 8 --prompt-len 32 --max-new 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.transformer import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b-smoke")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M")
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    engine = ServeEngine(cfg, params, batch_size=args.batch,
+                         max_len=args.max_len)
+
+    rng = np.random.default_rng(args.seed)
+    shape = ((cfg.num_codebooks, args.prompt_len)
+             if cfg.modality == "audio" else (args.prompt_len,))
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, shape,
+                                        dtype=np.int32),
+                    max_new_tokens=args.max_new)
+            for _ in range(args.requests)]
+
+    t0 = time.time()
+    done = engine.generate(reqs)
+    dt = time.time() - t0
+    n_tok = sum(r.generated.shape[-1] for r in done)
+    print(f"{len(done)} requests, {n_tok} new tokens in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s)")
+    for i, r in enumerate(done[:4]):
+        tail = r.generated[..., :8]
+        print(f"  req{i}: first tokens {tail.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.models.transformer import (
+    Model,
+    init_params,
+)
+
+__all__ = ["Model", "init_params"]

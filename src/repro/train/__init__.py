@@ -1,0 +1,5 @@
+from repro.train.losses import cross_entropy, total_loss
+from repro.train.trainer import TrainState, make_train_step, train_state_init
+
+__all__ = ["TrainState", "cross_entropy", "make_train_step", "total_loss",
+           "train_state_init"]

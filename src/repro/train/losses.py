@@ -1,0 +1,40 @@
+"""Loss functions: masked next-token CE + MoE aux terms."""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import PAD_LABEL
+
+LOAD_BALANCE_COEF = 0.01
+ROUTER_Z_COEF = 1e-3
+
+
+def cross_entropy(logits, labels) -> Tuple[jax.Array, jax.Array]:
+    """Masked CE. logits: (..., S, V); labels: (..., S) with PAD_LABEL masked.
+    Returns (sum_loss, num_tokens)."""
+    mask = labels != PAD_LABEL
+    safe = jnp.where(mask, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    loss = -jnp.where(mask, ll, 0.0)
+    return loss.sum(), mask.sum()
+
+
+def total_loss(cfg: ModelConfig, logits, labels, aux: Dict[str, jax.Array]
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    ce_sum, n = cross_entropy(logits, labels)
+    ce = ce_sum / jnp.maximum(n, 1)
+    loss = ce
+    # fixed metric structure (so distributed out_specs are static)
+    lb = aux.get("load_balance", jnp.zeros(())) / max(1, cfg.num_layers)
+    rz = aux.get("router_z", jnp.zeros(())) / max(1, cfg.num_layers)
+    if cfg.moe is not None:
+        loss = loss + LOAD_BALANCE_COEF * lb + ROUTER_Z_COEF * rz
+    metrics = {"ce": ce, "tokens": n.astype(jnp.float32),
+               "load_balance": lb, "router_z": rz, "loss": loss}
+    return loss, metrics

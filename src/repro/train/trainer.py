@@ -1,0 +1,169 @@
+"""Train-step builders.
+
+Two gradient-communication modes:
+
+* ``comm="gspmd"`` (production default, used by the dry-run): parameters are
+  FSDP(data/pod) x TP(model) sharded; XLA inserts the gradient
+  reduce-scatters/all-gathers from the sharding constraints.
+
+* ``comm="vci"`` (the paper's mode): the step runs under ``shard_map`` with
+  the data axes MANUAL and the model axis auto (GSPMD). Parameters are
+  replicated over data (DDP); gradients are explicitly partitioned into
+  buckets, each bucket assigned a CommContext -> VCI, and reduced on
+  independent streams by :func:`repro.core.bucketing.reduce_gradients`.
+  ``progress`` / ``num_streams`` / ``vci_policy`` / ``token_impl`` expose the
+  paper's entire design space (Global vs FG vs per-VCI, Fig. 5-8 ablations).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import CommRuntime, CommWorld, plan_buckets, reduce_gradients
+from repro.dist.sharding import Sharder, batch_axes
+from repro.models.transformer import Model, init_params
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.train.losses import total_loss
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+
+
+def train_state_init(cfg: ModelConfig, key: jax.Array) -> TrainState:
+    params = init_params(cfg, key)
+    opt = adamw_init(params, moment_dtype=jnp.dtype(cfg.optimizer_dtype))
+    return TrainState(params, opt, jnp.zeros((), jnp.int32))
+
+
+def _loss_fn(model: Model, cfg: ModelConfig, params, batch):
+    logits, aux, _ = model.forward(params, batch)
+    loss, metrics = total_loss(cfg, logits, batch["labels"], aux)
+    return loss, metrics
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    *,
+    mesh: Optional[Mesh] = None,
+    lr_fn: Optional[Callable] = None,
+    comm: str = "gspmd",
+    accum_steps: int = 1,
+    # --- vci-mode knobs (paper §4/§5) ---
+    num_streams: int = 8,
+    num_vcis: int = 8,
+    vci_policy: str = "fcfs",
+    progress: str = "hybrid",
+    join_every: int = 8,
+    token_impl: str = "barrier",
+    staging: str = "per_vci",
+    bucket_align: int = 8 * 128,
+    max_grad_norm: Optional[float] = 1.0,
+) -> Callable[[TrainState, Any], tuple]:
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    The returned function is NOT jitted; callers jit with the appropriate
+    in/out shardings (launch/train.py) or call it inside tests directly.
+    """
+    if lr_fn is None:
+        lr_fn = lambda step: 3e-4
+    shard = Sharder(mesh, cfg) if (mesh is not None and comm == "gspmd") else (
+        Sharder(None, cfg))
+    model = Model(cfg, shard if mesh is not None and comm == "gspmd" else None)
+
+    def grads_and_metrics(params, batch):
+        if accum_steps == 1:
+            (_, metrics), grads = jax.value_and_grad(
+                functools.partial(_loss_fn, model, cfg), has_aux=True)(
+                    params, batch)
+            return grads, metrics
+        # microbatch accumulation: split the batch dim, scan, mean grads
+        def split(x):
+            b = x.shape[0]
+            assert b % accum_steps == 0, (b, accum_steps)
+            return x.reshape((accum_steps, b // accum_steps) + x.shape[1:])
+
+        mb = jax.tree_util.tree_map(split, batch)
+
+        def body(carry, microbatch):
+            acc_g, acc_m = carry
+            (_, metrics), grads = jax.value_and_grad(
+                functools.partial(_loss_fn, model, cfg), has_aux=True)(
+                    params, microbatch)
+            acc_g = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32) / accum_steps,
+                acc_g, grads)
+            acc_m = jax.tree_util.tree_map(
+                lambda a, m: a + m / accum_steps, acc_m, metrics)
+            return (acc_g, acc_m), None
+
+        zero_g = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        _, m0 = jax.eval_shape(
+            functools.partial(_loss_fn, model, cfg), params,
+            jax.tree_util.tree_map(lambda x: x[0], mb))
+        zero_m = jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape), m0[1] if isinstance(m0, tuple) else m0)
+        (grads, metrics), _ = jax.lax.scan(body, (zero_g, zero_m), mb)
+        grads = jax.tree_util.tree_map(
+            lambda g, p: g.astype(p.dtype), grads, params)
+        return grads, metrics
+
+    def apply_update(state: TrainState, grads, metrics):
+        lr = lr_fn(state.step)
+        new_p, new_opt, om = adamw_update(
+            grads, state.opt, state.params, lr=jnp.asarray(lr, jnp.float32),
+            max_grad_norm=max_grad_norm)
+        metrics = dict(metrics) | om | {"lr": jnp.asarray(lr, jnp.float32)}
+        return TrainState(new_p, new_opt, state.step + 1), metrics
+
+    if comm == "gspmd":
+        def train_step(state: TrainState, batch):
+            grads, metrics = grads_and_metrics(state.params, batch)
+            return apply_update(state, grads, metrics)
+        return train_step
+
+    if comm != "vci":
+        raise ValueError(f"unknown comm mode {comm!r}")
+
+    # ---------------- vci mode -------------------------------------------
+    assert mesh is not None, "vci mode needs a mesh"
+    dp = batch_axes(mesh)
+
+    def inner_step(state: TrainState, batch):
+        grads, metrics = grads_and_metrics(state.params, batch)
+        plan = plan_buckets(grads, num_streams, align=bucket_align)
+        world = CommWorld(num_vcis=num_vcis, policy=vci_policy)
+        rt = CommRuntime(world, progress=progress, join_every=join_every,
+                         token_impl=token_impl)
+        grads = reduce_gradients(rt, grads, plan, axis=dp, mean=True,
+                                 staging=staging)
+        metrics = jax.tree_util.tree_map(
+            lambda m: jax.lax.pmean(m, dp), metrics)
+        return apply_update(state, grads, metrics)
+
+    METRIC_KEYS = ("ce", "tokens", "load_balance", "router_z", "loss",
+                   "grad_norm", "lr")
+
+    def train_step(state: TrainState, batch):
+        in_specs = (
+            jax.tree_util.tree_map(lambda _: P(), state),
+            jax.tree_util.tree_map(lambda _: P(dp), batch),
+        )
+        out_specs = (
+            jax.tree_util.tree_map(lambda _: P(), state),
+            {k: P() for k in METRIC_KEYS},
+        )
+        f = jax.shard_map(inner_step, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False,
+                          axis_names=set(dp))
+        return f(state, batch)
+
+    return train_step

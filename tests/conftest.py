@@ -1,0 +1,36 @@
+"""Shared test configuration.
+
+NOTE: XLA_FLAGS / host-device-count is deliberately NOT set here — smoke
+tests and benchmarks must see the single real CPU device. Multi-device
+checks run in subprocesses (tests/_multidev_checks.py) that set the flag
+themselves before importing jax.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_multidev(script: str, *args: str, devices: int = 8,
+                 timeout: int = 900) -> subprocess.CompletedProcess:
+    """Run a helper script in a subprocess with N virtual host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", script), *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+@pytest.fixture(scope="session")
+def multidev():
+    return run_multidev
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

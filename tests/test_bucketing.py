@@ -1,0 +1,128 @@
+"""Unit + property tests for gradient bucketing (paper §4.3 analogues)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bucketing import (
+    TILE,
+    BucketPlan,
+    pack_bucket,
+    plan_buckets,
+    unpack_bucket,
+)
+
+
+def _tree(shapes):
+    return {f"leaf{i}": jnp.arange(int(np.prod(s)), dtype=jnp.float32).reshape(s) * (i + 1)
+            for i, s in enumerate(shapes)}
+
+
+class TestPlan:
+    def test_every_leaf_exactly_once(self):
+        tree = _tree([(4, 8), (16,), (2, 3, 5), (7,), (128, 2)])
+        plan = plan_buckets(tree, 3)
+        seen = sorted(s.index for b in plan.buckets for s in b.slots)
+        assert seen == list(range(5))
+
+    def test_num_buckets_capped_by_leaves(self):
+        tree = _tree([(4,), (5,)])
+        plan = plan_buckets(tree, 10)
+        assert plan.num_buckets == 2
+
+    def test_alignment(self):
+        tree = _tree([(100,), (3,), (77,)])
+        plan = plan_buckets(tree, 2, align=TILE)
+        for b in plan.buckets:
+            assert b.padded_size % TILE == 0
+        plan1 = plan_buckets(tree, 2, align=1)
+        assert plan1.total_padded <= plan.total_padded
+
+    def test_greedy_balance(self):
+        # equal-size leaves must spread evenly
+        tree = _tree([(64,)] * 8)
+        plan = plan_buckets(tree, 4, align=1)
+        loads = [sum(s.size for s in b.slots) for b in plan.buckets]
+        assert max(loads) == min(loads) == 128
+
+    def test_offsets_contiguous(self):
+        tree = _tree([(10,), (20,), (30,), (40,)])
+        plan = plan_buckets(tree, 2, align=1)
+        for b in plan.buckets:
+            off = 0
+            for s in b.slots:
+                assert s.offset == off
+                off += s.size
+
+
+class TestPackUnpack:
+    def test_roundtrip_exact(self):
+        tree = _tree([(4, 8), (16,), (2, 3, 5), (1,)])
+        leaves, _ = jax.tree_util.tree_flatten(tree)
+        plan = plan_buckets(tree, 2)
+        recovered = {}
+        for b in plan.buckets:
+            flat = pack_bucket(leaves, b)
+            assert flat.shape == (b.padded_size,)
+            for idx, val in unpack_bucket(flat, b):
+                recovered[idx] = val
+        for i, leaf in enumerate(leaves):
+            np.testing.assert_array_equal(recovered[i], leaf)
+
+    def test_padding_is_zero(self):
+        tree = _tree([(5,)])
+        plan = plan_buckets(tree, 1, align=16)
+        flat = pack_bucket(jax.tree_util.tree_leaves(tree), plan.buckets[0])
+        np.testing.assert_array_equal(flat[5:], 0.0)
+
+    def test_dtype_cast_roundtrip(self):
+        leaves = [jnp.ones((4,), jnp.bfloat16) * 1.5]
+        plan = plan_buckets(leaves, 1)
+        flat = pack_bucket(leaves, plan.buckets[0], dtype=jnp.float32)
+        assert flat.dtype == jnp.float32
+        (idx, val), = unpack_bucket(flat, plan.buckets[0])
+        assert val.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(val, leaves[0])
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    shapes=st.lists(
+        st.lists(st.integers(1, 6), min_size=0, max_size=3), min_size=1,
+        max_size=8),
+    nb=st.integers(1, 5),
+    align=st.sampled_from([1, 8, 128]),
+)
+def test_property_bucketing_roundtrip(shapes, nb, align):
+    """For ANY pytree of shapes, bucketing + pack + unpack is the identity."""
+    leaves = [np.random.default_rng(i).normal(size=s).astype(np.float32)
+              for i, s in enumerate(shapes)]
+    tree = {f"l{i}": jnp.asarray(a) for i, a in enumerate(leaves)}
+    flat_leaves, treedef = jax.tree_util.tree_flatten(tree)
+    plan = plan_buckets(tree, nb, align=align)
+    out = [None] * len(flat_leaves)
+    for b in plan.buckets:
+        buf = pack_bucket(flat_leaves, b)
+        assert buf.shape[0] % align == 0
+        for idx, val in unpack_bucket(buf, b):
+            out[idx] = val
+    rebuilt = jax.tree_util.tree_unflatten(treedef, out)
+    for a, b_ in zip(jax.tree_util.tree_leaves(tree),
+                     jax.tree_util.tree_leaves(rebuilt)):
+        np.testing.assert_array_equal(a, b_)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 2048), min_size=1, max_size=20),
+    nb=st.integers(1, 8),
+)
+def test_property_balance_bound(sizes, nb):
+    """Greedy LPT bound: max load <= mean + max_item (classic guarantee)."""
+    tree = [jnp.zeros((s,)) for s in sizes]
+    plan = plan_buckets(tree, nb, align=1)
+    loads = [sum(s.size for s in b.slots) for b in plan.buckets]
+    mean = sum(sizes) / len(plan.buckets)
+    assert max(loads) <= mean + max(sizes) + 1e-9

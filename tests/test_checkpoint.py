@@ -1,0 +1,48 @@
+"""Checkpoint roundtrip tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import latest_step, load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.train.trainer import train_state_init
+
+
+def test_roundtrip_train_state(tmp_path):
+    cfg = get_config("olmo-1b-smoke")
+    state = train_state_init(cfg, jax.random.PRNGKey(0))
+    out = save_checkpoint(str(tmp_path), 7, state, metadata={"arch": cfg.name})
+    assert latest_step(str(tmp_path)) == 7
+    restored = load_checkpoint(str(tmp_path), 7, state)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_latest_step_multiple(tmp_path):
+    tree = {"x": jnp.ones((2,))}
+    for s in (1, 12, 5):
+        save_checkpoint(str(tmp_path), s, tree)
+    assert latest_step(str(tmp_path)) == 12
+    assert latest_step(str(tmp_path / "nope")) is None
+
+
+def test_tree_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"x": jnp.ones((2,))})
+    with pytest.raises(ValueError, match="mismatch"):
+        load_checkpoint(str(tmp_path), 0, {"y": jnp.ones((2,))})
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"x": jnp.ones((2,))})
+    with pytest.raises(ValueError, match="shape"):
+        load_checkpoint(str(tmp_path), 0, {"x": jnp.ones((3,))})
+
+
+def test_dtype_cast_on_load(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"x": jnp.ones((2,), jnp.float32)})
+    out = load_checkpoint(str(tmp_path), 0, {"x": jnp.ones((2,), jnp.bfloat16)})
+    assert out["x"].dtype == jnp.bfloat16

@@ -1,0 +1,79 @@
+"""Synthetic data pipeline tests."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import (
+    PAD_LABEL,
+    batch_spec,
+    synthetic_batch,
+    synthetic_batches,
+)
+from repro.configs.base import INPUT_SHAPES
+
+
+def test_deterministic():
+    cfg = get_config("olmo-1b-smoke")
+    a = synthetic_batch(cfg, 4, 32, seed=3, step=5)
+    b = synthetic_batch(cfg, 4, 32, seed=3, step=5)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    c = synthetic_batch(cfg, 4, 32, seed=3, step=6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    cfg = get_config("olmo-1b-smoke")
+    b = synthetic_batch(cfg, 2, 16, seed=0)
+    # label[t] is the NEXT token: check the overlap region token[1:]==label[:-1]
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_successor_structure_learnable():
+    """>= 80% of transitions follow the +stride successor rule (noise=0.1)."""
+    cfg = get_config("olmo-1b-smoke")
+    b = synthetic_batch(cfg, 8, 256, seed=1)
+    t = b["tokens"]
+    succ = (t[:, :-1] + 7) % cfg.vocab_size
+    frac = (t[:, 1:] == succ).mean()
+    assert frac > 0.8
+
+
+def test_vlm_batch():
+    cfg = get_config("phi-3-vision-4.2b-smoke")
+    S = 48
+    b = synthetic_batch(cfg, 2, S, seed=0)
+    P = cfg.num_patches
+    assert b["tokens"].shape == (2, S - P)
+    assert b["image_embeds"].shape[:2] == (2, P)
+    assert b["labels"].shape == (2, S)
+    assert (b["labels"][:, :P] == PAD_LABEL).all()   # image positions masked
+    assert (b["labels"][:, P:] != PAD_LABEL).all()
+
+
+def test_audio_batch():
+    cfg = get_config("musicgen-large-smoke")
+    b = synthetic_batch(cfg, 2, 16, seed=0)
+    assert b["tokens"].shape == (2, cfg.num_codebooks, 16)
+    assert b["labels"].shape == (2, cfg.num_codebooks, 16)
+
+
+def test_iterator_advances():
+    cfg = get_config("olmo-1b-smoke")
+    it = synthetic_batches(cfg, 2, 8, seed=0)
+    b0, b1 = next(it), next(it)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_batch_spec_covers_all_inputs(shape_name):
+    shape = INPUT_SHAPES[shape_name]
+    for arch in ("olmo-1b", "phi-3-vision-4.2b", "musicgen-large"):
+        cfg = get_config(arch)
+        spec = batch_spec(cfg, shape)
+        assert "tokens" in spec
+        if shape.kind == "train":
+            assert "labels" in spec
+        if cfg.modality == "vlm" and shape.kind != "decode":
+            assert "image_embeds" in spec

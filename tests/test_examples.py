@@ -1,0 +1,59 @@
+"""Every example script must run end-to-end (subprocess smokes)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_example(name, *args, devices=None, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    if devices:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", name), *args],
+        capture_output=True, text=True, cwd=REPO, env=env, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_quickstart():
+    r = run_example("quickstart.py")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "generated[3]" in r.stdout
+
+
+def test_stencil_halo():
+    r = run_example("stencil_halo.py", devices=4)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+def test_bspmm_accumulate():
+    r = run_example("bspmm_accumulate.py", devices=8)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+def test_ebms_bands():
+    r = run_example("ebms_bands.py", devices=8)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_serve_batch():
+    r = run_example("serve_batch.py")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_train_e2e_tiny():
+    r = run_example("train_e2e.py", "--tiny", "--steps", "15")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "checkpoint:" in r.stdout

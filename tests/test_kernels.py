@@ -1,0 +1,235 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret=True on CPU).
+
+Every kernel in repro.kernels is swept over shapes and dtypes and asserted
+allclose against its ref.py oracle, per the assignment.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import flash_attention, row_gather, ssd_chunked
+from repro.kernels.moe_gather import row_gather_ref
+from repro.models import ssm as ssm_mod
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _qkv(key, b, h, kv, sq, sk, hd, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, sq, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, kv, sk, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, kv, sk, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+_TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("sq,sk", [(128, 128), (256, 128), (128, 384),
+                                       (96, 160), (64, 64)])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_shapes_causal(self, sq, sk, causal):
+        q, k, v = _qkv(jax.random.PRNGKey(0), 2, 4, 4, sq, sk, 64, jnp.float32)
+        out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                              interpret=True)
+        expect = ref.attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, expect, **_TOL[jnp.float32])
+
+    @pytest.mark.parametrize("h,kv", [(8, 8), (8, 2), (8, 1)])
+    def test_gqa_mqa(self, h, kv):
+        q, k, v = _qkv(jax.random.PRNGKey(1), 1, h, kv, 128, 128, 64,
+                       jnp.float32)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        expect = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, expect, **_TOL[jnp.float32])
+
+    @pytest.mark.parametrize("window", [32, 64, 128])
+    def test_sliding_window(self, window):
+        q, k, v = _qkv(jax.random.PRNGKey(2), 1, 2, 2, 256, 256, 32,
+                       jnp.float32)
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64, interpret=True)
+        expect = ref.attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(out, expect, **_TOL[jnp.float32])
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        q, k, v = _qkv(jax.random.PRNGKey(3), 2, 4, 2, 128, 128, 64, dtype)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        assert out.dtype == dtype
+        expect = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out.astype(jnp.float32),
+                                   expect.astype(jnp.float32), **_TOL[dtype])
+
+    def test_ragged_seq_padding(self):
+        """seq not a multiple of the block: padded KV rows must not leak."""
+        q, k, v = _qkv(jax.random.PRNGKey(4), 1, 2, 2, 100, 100, 32,
+                       jnp.float32)
+        out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                              interpret=True)
+        expect = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, expect, **_TOL[jnp.float32])
+
+    def test_head_dim_256(self):
+        """gemma-2b uses head_dim=256."""
+        q, k, v = _qkv(jax.random.PRNGKey(5), 1, 4, 1, 128, 128, 256,
+                       jnp.float32)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        expect = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, expect, **_TOL[jnp.float32])
+
+
+class TestSSDKernel:
+    @pytest.mark.parametrize("s,chunk", [(128, 32), (256, 64), (64, 64)])
+    @pytest.mark.parametrize("g", [1, 2])
+    def test_matches_model_reference(self, s, chunk, g):
+        b, h, p, n = 2, 4, 32, 16
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        B = jax.random.normal(ks[3], (b, s, g, n)) * 0.3
+        C = jax.random.normal(ks[4], (b, s, g, n)) * 0.3
+        y_k, st_k = ssd_chunked(x, dt, A, B, C, chunk=chunk, interpret=True)
+        y_r, st_r = ssm_mod.ssd_chunked(x, dt, A, B, C, chunk=chunk)
+        np.testing.assert_allclose(y_k, y_r, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(st_k, st_r, rtol=2e-4, atol=2e-4)
+
+    def test_chunk_oracle(self):
+        """The single-chunk kernel vs the per-chunk pure oracle."""
+        c, p, n = 32, 16, 8
+        ks = jax.random.split(jax.random.PRNGKey(1), 5)
+        x = jax.random.normal(ks[0], (c, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (c,)))
+        A = -jnp.exp(jax.random.normal(ks[2], ()) * 0.3)
+        cum = jnp.cumsum(dt * A)
+        B = jax.random.normal(ks[3], (c, n)) * 0.3
+        C = jax.random.normal(ks[4], (c, n)) * 0.3
+        y, st = ref.ssd_chunk_ref(x, dt, cum, B, C)
+        assert y.shape == (c, p) and st.shape == (n, p)
+        # oracle self-consistency vs the naive recurrence
+        s_state = jnp.zeros((n, p))
+        ys = []
+        prev_cum = 0.0
+        for t in range(c):
+            decay = jnp.exp(cum[t] - prev_cum)
+            s_state = decay * s_state + dt[t] * B[t][:, None] * x[t][None, :]
+            ys.append(C[t] @ s_state)
+            prev_cum = cum[t]
+        np.testing.assert_allclose(y, jnp.stack(ys), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(st, s_state, rtol=1e-4, atol=1e-4)
+
+    def test_decode_step_consistent_with_chunked(self):
+        """Sequential O(1) decode steps == the blocked scan."""
+        b, s, h, p, n, g = 1, 16, 2, 8, 4, 1
+        ks = jax.random.split(jax.random.PRNGKey(2), 5)
+        x = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        B = jax.random.normal(ks[3], (b, s, g, n)) * 0.3
+        C = jax.random.normal(ks[4], (b, s, g, n)) * 0.3
+        y_blk, st_blk = ssm_mod.ssd_chunked(x, dt, A, B, C, chunk=8)
+        st = jnp.zeros((b, h, n, p))
+        ys = []
+        for t in range(s):
+            y_t, st = ssm_mod.ssd_decode_step(
+                st, x[:, t], dt[:, t], A, B[:, t], C[:, t])
+            ys.append(y_t)
+        y_seq = jnp.stack(ys, axis=1)
+        np.testing.assert_allclose(y_blk, y_seq, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(st_blk, st, rtol=1e-4, atol=1e-4)
+
+    def test_initial_state_propagates(self):
+        """ssd_chunked(init) == running the prefix then the suffix."""
+        b, s, h, p, n, g = 1, 32, 2, 8, 4, 1
+        ks = jax.random.split(jax.random.PRNGKey(3), 5)
+        x = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        B = jax.random.normal(ks[3], (b, s, g, n)) * 0.3
+        C = jax.random.normal(ks[4], (b, s, g, n)) * 0.3
+        y_full, st_full = ssm_mod.ssd_chunked(x, dt, A, B, C, chunk=8)
+        _, st_half = ssm_mod.ssd_chunked(
+            x[:, :16], dt[:, :16], A, B[:, :16], C[:, :16], chunk=8)
+        y2, st2 = ssm_mod.ssd_chunked(
+            x[:, 16:], dt[:, 16:], A, B[:, 16:], C[:, 16:], chunk=8,
+            initial_state=st_half)
+        np.testing.assert_allclose(y2, y_full[:, 16:], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(st2, st_full, rtol=1e-4, atol=1e-4)
+
+    def test_ragged_seq_pad(self):
+        """seq not a multiple of chunk pads with dt=0 (exact)."""
+        b, s, h, p, n, g = 1, 20, 2, 8, 4, 1
+        ks = jax.random.split(jax.random.PRNGKey(4), 5)
+        x = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        B = jax.random.normal(ks[3], (b, s, g, n)) * 0.3
+        C = jax.random.normal(ks[4], (b, s, g, n)) * 0.3
+        y8, st8 = ssm_mod.ssd_chunked(x, dt, A, B, C, chunk=8)
+        y20, st20 = ssm_mod.ssd_chunked(x, dt, A, B, C, chunk=20)
+        np.testing.assert_allclose(y8, y20, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(st8, st20, rtol=1e-4, atol=1e-4)
+
+
+class TestRowGather:
+    @pytest.mark.parametrize("rows,d", [(16, 64), (64, 128), (8, 512)])
+    def test_matches_ref(self, rows, d):
+        src = jax.random.normal(jax.random.PRNGKey(0), (rows, d))
+        idx = jax.random.randint(jax.random.PRNGKey(1), (32,), -1, rows)
+        out = row_gather(src, idx, interpret=True)
+        expect = row_gather_ref(src, idx)
+        np.testing.assert_allclose(out, expect)
+
+    def test_negative_idx_zeros(self):
+        src = jnp.ones((4, 8))
+        idx = jnp.array([-1, 0, -1, 3])
+        out = row_gather(src, idx, interpret=True)
+        np.testing.assert_array_equal(out[0], 0.0)
+        np.testing.assert_array_equal(out[2], 0.0)
+        np.testing.assert_array_equal(out[1], 1.0)
+
+
+class TestBucketPack:
+    def _roundtrip(self, sizes, tile=128):
+        from repro.kernels.bucket_pack import (
+            arena_from_leaves, bucket_pack_pallas, bucket_pack_ref,
+            build_tile_tables)
+        rng = np.random.default_rng(0)
+        leaves = [jnp.asarray(rng.normal(size=(s,)), jnp.float32)
+                  for s in sizes]
+        arena, src_off = arena_from_leaves(leaves, tile=tile)
+        # destination: dense tile-aligned concatenation (a bucket buffer)
+        dst_off, cur = [], 0
+        for s in sizes:
+            dst_off.append(cur)
+            cur += -(-s // tile) * tile
+        padded = cur
+        block, valid = build_tile_tables(src_off, dst_off, sizes, padded,
+                                         tile=tile)
+        out_k = bucket_pack_pallas(arena, jnp.asarray(block),
+                                   jnp.asarray(valid), padded, tile=tile,
+                                   interpret=True)
+        out_r = bucket_pack_ref(arena, block, valid, padded, tile=tile)
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+        # semantic check: each segment equals its leaf, padding is zero
+        for i, s in enumerate(sizes):
+            seg = np.asarray(out_k[dst_off[i]: dst_off[i] + s])
+            np.testing.assert_array_equal(seg, np.asarray(leaves[i]))
+            tail = np.asarray(
+                out_k[dst_off[i] + s: dst_off[i] + -(-s // tile) * tile])
+            np.testing.assert_array_equal(tail, 0.0)
+        return out_k
+
+    @pytest.mark.parametrize("sizes", [[128], [100], [128, 256, 64],
+                                       [1, 127, 129, 1000], [512] * 8])
+    def test_shapes(self, sizes):
+        self._roundtrip(sizes)
+
+    def test_large_tile(self):
+        self._roundtrip([2048, 77, 4096], tile=1024)

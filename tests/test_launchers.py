@@ -1,0 +1,70 @@
+"""CLI driver smoke tests (subprocess; single real device)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_cli(mod, *args, timeout=900, devices=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    if devices:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    return subprocess.run([sys.executable, "-m", mod, *args],
+                          capture_output=True, text=True, cwd=REPO,
+                          env=env, timeout=timeout)
+
+
+def test_train_cli(tmp_path):
+    r = run_cli("repro.launch.train", "--arch", "olmo-1b-smoke",
+                "--steps", "12", "--batch", "2", "--seq", "32",
+                "--ckpt-dir", str(tmp_path), "--ckpt-every", "6",
+                "--log-every", "6")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "step    12" in r.stdout
+    assert (tmp_path / "step_00000012").is_dir()
+    # resume path
+    r2 = run_cli("repro.launch.train", "--arch", "olmo-1b-smoke",
+                 "--steps", "14", "--batch", "2", "--seq", "32",
+                 "--ckpt-dir", str(tmp_path), "--log-every", "2")
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "resumed from step 12" in r2.stdout
+
+
+def test_train_cli_vci_mode():
+    r = run_cli("repro.launch.train", "--arch", "olmo-1b-smoke",
+                "--steps", "4", "--batch", "4", "--seq", "32",
+                "--mesh", "4", "--comm", "vci", "--num-streams", "4",
+                "--progress", "hybrid", "--log-every", "2", devices=4)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "step     4" in r.stdout
+
+
+def test_serve_cli():
+    r = run_cli("repro.launch.serve", "--arch", "mamba2-780m-smoke",
+                "--requests", "2", "--batch", "2", "--prompt-len", "8",
+                "--max-new", "4", "--max-len", "32")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "tok/s" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_cli_single_pair():
+    r = run_cli("repro.launch.dryrun", "--arch", "olmo-1b",
+                "--shape", "decode_32k", "--out", "/tmp/dryrun_test_out",
+                timeout=1200)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "[ok] olmo-1b__decode_32k__16x16" in r.stdout
+
+
+def test_report_cli():
+    r = run_cli("repro.launch.report", "--dir", "reports/dryrun_baseline",
+                "--mesh", "16x16")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "80 ok / 0 failed" in r.stdout
+    assert "| arch | shape |" in r.stdout

@@ -1,0 +1,52 @@
+"""Multi-device integration tests (subprocess: 8 virtual CPU devices).
+
+Each test shells out to tests/_multidev_checks.py with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the main pytest
+process keeps the single real device (per the dry-run isolation rule).
+"""
+
+import pytest
+
+
+def _run(multidev, name, devices=8):
+    r = multidev("_multidev_checks.py", name, devices=devices)
+    assert r.returncode == 0, f"\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    assert f"PASS {name}" in r.stdout
+
+
+def test_collectives_numerics(multidev):
+    _run(multidev, "collectives_numerics")
+
+
+def test_accumulate_relaxed_matches_ordered(multidev):
+    _run(multidev, "accumulate_relaxed_matches_ordered")
+
+
+def test_reduce_gradients_matches_pmean(multidev):
+    _run(multidev, "reduce_gradients_matches_pmean")
+
+
+@pytest.mark.slow
+def test_vci_train_step_matches_gspmd(multidev):
+    _run(multidev, "vci_train_step_matches_gspmd")
+
+
+def test_scan_vs_unroll_collective_parity(multidev):
+    _run(multidev, "scan_vs_unroll_collective_parity")
+
+
+def test_progress_mode_hlo_structure(multidev):
+    _run(multidev, "progress_mode_hlo_structure")
+
+
+def test_moe_expert_parallel_all_to_all(multidev):
+    _run(multidev, "moe_expert_parallel_all_to_all", devices=4)
+
+
+@pytest.mark.slow
+def test_vci_trainer_lowers_production_mesh(multidev):
+    _run(multidev, "vci_trainer_lowers_production_mesh", devices=512)
+
+
+def test_flash_decode_sequence_sharded(multidev):
+    _run(multidev, "flash_decode_sequence_sharded")

@@ -1,0 +1,61 @@
+"""Schedule + loss unit tests."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import PAD_LABEL
+from repro.optim.schedule import cosine_schedule, linear_warmup
+from repro.train.losses import cross_entropy, total_loss
+
+
+def test_linear_warmup():
+    assert float(linear_warmup(0, peak=1.0, warmup_steps=10)) < 0.2
+    np.testing.assert_allclose(
+        float(linear_warmup(9, peak=2.0, warmup_steps=10)), 2.0)
+    np.testing.assert_allclose(
+        float(linear_warmup(100, peak=2.0, warmup_steps=10)), 2.0)
+
+
+def test_cosine_schedule_shape():
+    peak, ws, ts = 1.0, 10, 110
+    vals = [float(cosine_schedule(s, peak=peak, warmup_steps=ws,
+                                  total_steps=ts)) for s in range(0, ts, 5)]
+    assert vals[1] <= peak + 1e-6
+    assert max(vals) <= peak + 1e-6
+    # decays monotonically after warmup
+    post = vals[3:]
+    assert all(a >= b - 1e-9 for a, b in zip(post, post[1:]))
+    # floors at floor_ratio * peak
+    end = float(cosine_schedule(ts, peak=peak, warmup_steps=ws, total_steps=ts))
+    np.testing.assert_allclose(end, 0.1 * peak, rtol=1e-5)
+
+
+def test_cross_entropy_uniform_logits():
+    V = 16
+    logits = jnp.zeros((2, 4, V))
+    labels = jnp.zeros((2, 4), jnp.int32)
+    s, n = cross_entropy(logits, labels)
+    np.testing.assert_allclose(float(s) / float(n), np.log(V), rtol=1e-6)
+
+
+def test_cross_entropy_masks_pad():
+    V = 8
+    logits = jnp.zeros((1, 4, V))
+    labels = jnp.array([[1, PAD_LABEL, 2, PAD_LABEL]], jnp.int32)
+    s, n = cross_entropy(logits, labels)
+    assert int(n) == 2
+    np.testing.assert_allclose(float(s), 2 * np.log(V), rtol=1e-6)
+
+
+def test_total_loss_adds_moe_aux():
+    cfg = get_config("mixtral-8x22b-smoke")
+    logits = jnp.zeros((1, 4, cfg.vocab_size))
+    labels = jnp.zeros((1, 4), jnp.int32)
+    aux = {"load_balance": jnp.float32(2.0 * cfg.num_layers),
+           "router_z": jnp.float32(1.0 * cfg.num_layers)}
+    loss, metrics = total_loss(cfg, logits, labels, aux)
+    assert float(loss) > float(metrics["ce"])
+    dense = get_config("olmo-1b-smoke")
+    loss_d, m_d = total_loss(dense, logits, labels, aux)
+    np.testing.assert_allclose(float(loss_d), float(m_d["ce"]))

@@ -1,0 +1,154 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.vci import VCIPool
+from repro.models.layers import apply_rope, layer_norm, rms_norm
+from repro.models.attention import causal_mask
+
+
+# ---------------------------------------------------------------------------
+# VCI pool invariants under arbitrary acquire/release interleavings
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(
+    num_vcis=st.integers(1, 8),
+    policy=st.sampled_from(["fcfs", "round_robin", "hash", "hinted"]),
+    ops=st.lists(st.tuples(st.booleans(), st.integers(0, 15)), max_size=40),
+)
+def test_vci_pool_invariants(num_vcis, policy, ops):
+    pool = VCIPool(num_vcis=num_vcis, policy=policy)
+    held = {}
+    for acquire, key in ops:
+        name = f"ctx{key}"
+        if acquire and name not in held:
+            v = pool.acquire(name)
+            held[name] = v.index
+            # I1: indices always in range
+            assert 0 <= v.index < num_vcis
+        elif not acquire and name in held:
+            pool.release(name)
+            del held[name]
+    # I2: the pool tracks exactly the held contexts
+    assert pool.active == len(held)
+    # I3 (fcfs): a non-fallback VCI is held by at most one context
+    if policy == "fcfs":
+        non_fb = [v for v in held.values() if v != VCIPool.FALLBACK]
+        assert len(non_fb) == len(set(non_fb))
+
+
+# ---------------------------------------------------------------------------
+# numeric layer invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3), s=st.integers(1, 8),
+    hd=st.sampled_from([2, 4, 8, 64]),
+    scale=st.floats(0.1, 100.0),
+)
+def test_rope_preserves_norms(b, s, hd, scale):
+    """RoPE is a rotation: per-pair L2 norms are invariant."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(b, s, 2, hd)) * scale, jnp.float32)
+    pos = jnp.arange(s)
+    y = apply_rope(x, pos, 10_000.0)
+    nx = np.linalg.norm(np.asarray(x), axis=-1)
+    ny = np.linalg.norm(np.asarray(y), axis=-1)
+    np.testing.assert_allclose(nx, ny, rtol=2e-4)
+
+
+def test_rope_relative_position_property():
+    """<rope(q,m), rope(k,n)> depends only on m - n."""
+    hd = 32
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, hd)), jnp.float32)
+
+    def dot(m, n):
+        qm = apply_rope(q, jnp.array([m]), 10_000.0)
+        kn = apply_rope(k, jnp.array([n]), 10_000.0)
+        return float(jnp.sum(qm * kn))
+
+    np.testing.assert_allclose(dot(5, 3), dot(12, 10), rtol=1e-4)
+    np.testing.assert_allclose(dot(7, 7), dot(0, 0), rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(scale=st.floats(0.1, 1e3))  # below ~0.1 the eps=1e-6 floor kicks in
+def test_rms_norm_scale_invariant(scale):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    a = rms_norm(x)
+    b = rms_norm(x * scale)
+    # eps=1e-6 inside the rsqrt gives a small scale-dependent shift
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_nonparametric_layer_norm_output_stats():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(8, 256)) * 10 + 3, jnp.float32)
+    y = np.asarray(layer_norm(x))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.std(-1), 1.0, atol=1e-2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(q=st.integers(1, 12), kv=st.integers(1, 12),
+       w=st.one_of(st.none(), st.integers(1, 12)),
+       off=st.integers(0, 8))
+def test_causal_mask_properties(q, kv, w, off):
+    m = np.asarray(causal_mask(q, kv, window=w, q_offset=off))
+    assert m.shape == (q, kv)
+    for i in range(q):
+        for j in range(kv):
+            expect = j <= i + off
+            if w is not None:
+                expect = expect and j > i + off - w
+            assert m[i, j] == expect
+
+
+# ---------------------------------------------------------------------------
+# MoE router invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_moe_dropfree_is_exact_topk_mixture(seed):
+    """With capacity >= S*K the dispatch must equal the explicit per-token
+    top-k mixture of expert FFNs — no drops, no misrouting."""
+    from dataclasses import replace
+    from repro.configs import get_config
+    from repro.models.moe import moe_ffn
+    from repro.models.layers import gated_ffn
+    from repro.models.transformer import init_params
+
+    cfg = get_config("mixtral-8x22b-smoke")
+    cfg = replace(cfg, moe=replace(cfg.moe,
+                                   capacity_factor=float(cfg.moe.num_experts),
+                                   capacity_factor_eval=float(cfg.moe.num_experts)))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    lp = jax.tree_util.tree_map(lambda a: a[0], params["layers"]["moe"])
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 8, cfg.d_model),
+                          jnp.float32)
+    y, aux = moe_ffn(cfg, x, lp, None, inference=True)
+
+    logits = (x @ lp["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, cfg.moe.top_k)
+    gates = gates / gates.sum(-1, keepdims=True)
+    expect = jnp.zeros_like(x)
+    for e in range(cfg.moe.num_experts):
+        pe = {k: lp[k][e] for k in ("w_gate", "w_up", "w_down")}
+        ye = gated_ffn(cfg, x, pe)
+        wsel = ((eidx == e) * gates).sum(-1)[..., None]
+        expect = expect + ye * wsel
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect),
+                               rtol=5e-4, atol=5e-5)
+    # Switch LB loss ~>= 1 (soft probs vs hard counts allow a small dip)
+    assert float(aux["load_balance"]) >= 0.98

@@ -1,0 +1,149 @@
+"""Roofline HLO-parser unit tests (synthetic HLO snippets) + term sanity."""
+
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.roofline import (
+    CollectiveOp,
+    _shape_bytes,
+    _split_computations,
+    _while_trip_counts,
+    analytic_flops,
+    analytic_hbm_bytes,
+    build_roofline,
+    parse_collectives,
+)
+
+
+class TestShapeBytes:
+    def test_simple(self):
+        assert _shape_bytes("bf16[16,128]{1,0}") == 16 * 128 * 2
+        assert _shape_bytes("f32[4,4]") == 64
+        assert _shape_bytes("s32[10]") == 40
+        assert _shape_bytes("pred[8]") == 8
+
+    def test_tuple(self):
+        assert _shape_bytes("(f32[4], bf16[8])") == 16 + 16
+
+    def test_scalar_and_token(self):
+        assert _shape_bytes("f32[]") == 4   # scalar: one element
+        assert _shape_bytes("token[]") == 0
+
+
+class TestLinkByteModel:
+    def test_all_reduce_2x(self):
+        op = CollectiveOp("all-reduce", 1000, group_size=8, computation="e")
+        np.testing.assert_allclose(op.link_bytes, 1000 * 2 * 7 / 8)
+
+    def test_all_gather_shard_times_n_minus_1(self):
+        # operand is the per-device SHARD; ring AG ships it (n-1) times
+        op = CollectiveOp("all-gather", 1000, group_size=4, computation="e")
+        np.testing.assert_allclose(op.link_bytes, 3000)
+
+    def test_permute_1x(self):
+        op = CollectiveOp("collective-permute", 1000, group_size=16,
+                          computation="e")
+        np.testing.assert_allclose(op.link_bytes, 1000)
+
+    def test_multiplier(self):
+        op = CollectiveOp("all-to-all", 100, group_size=2, computation="e",
+                          multiplier=5)
+        np.testing.assert_allclose(op.link_bytes, 100 * 0.5 * 5)
+
+
+SYNTHETIC_HLO = """\
+HloModule test
+
+%body (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %ar = f32[64]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%sum
+}
+
+%cond (p: (s32[], f32[64])) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %w = (s32[], f32[64]) while(%t), condition=%cond, body=%body
+  %ag = f32[256]{0} all-gather(f32[64]{0} %a), replica_groups={{0,1,2,3}}
+}
+"""
+
+
+class TestHLOParse:
+    def test_split_computations(self):
+        comps = _split_computations(SYNTHETIC_HLO)
+        assert {"body", "cond", "main"} <= set(comps)
+        assert "all-reduce" in comps["body"]
+
+    def test_trip_count_from_cond_constant(self):
+        comps = _split_computations(SYNTHETIC_HLO)
+        assert _while_trip_counts(comps) == {"body": 12}
+
+    def test_trip_count_prefers_backend_config(self):
+        hlo = SYNTHETIC_HLO.replace(
+            "body=%body",
+            'body=%body, backend_config={"known_trip_count":{"n":"7"}}')
+        comps = _split_computations(hlo)
+        assert _while_trip_counts(comps) == {"body": 7}
+
+    def test_collectives_multiplied_by_trip_count(self):
+        ops = parse_collectives(SYNTHETIC_HLO, 4)
+        by_kind = {o.kind: o for o in ops}
+        ar = by_kind["all-reduce"]
+        assert ar.multiplier == 12
+        assert ar.group_size == 4
+        # payload from operand f32[64]... operand sig is "%x" -> falls back to out
+        assert ar.bytes_payload == 64 * 4
+        ag = by_kind["all-gather"]
+        assert ag.multiplier == 1
+        assert ag.bytes_payload == 64 * 4  # operand, not the bigger output
+
+    def test_iota_replica_groups(self):
+        hlo = SYNTHETIC_HLO.replace("replica_groups={{0,1,2,3}}",
+                                    "replica_groups=[2,8]<=[16]")
+        ops = parse_collectives(hlo, 16)
+        assert all(o.group_size == 8 for o in ops)
+
+
+class TestAnalyticTerms:
+    @pytest.mark.parametrize("arch", ["olmo-1b", "mixtral-8x22b",
+                                      "mamba2-780m"])
+    def test_train_flops_dominated_by_6nd(self, arch):
+        cfg = get_config(arch)
+        shape = INPUT_SHAPES["train_4k"]
+        fl = analytic_flops(cfg, shape)
+        model = 6.0 * cfg.active_param_count() * shape.global_batch * shape.seq_len
+        np.testing.assert_allclose(fl["model"], model)
+        assert fl["total"] >= fl["model"]
+        assert fl["total"] < 3.0 * fl["model"]  # remat+attn bounded
+
+    def test_decode_flops_2n(self):
+        cfg = get_config("olmo-1b")
+        shape = INPUT_SHAPES["decode_32k"]
+        fl = analytic_flops(cfg, shape)
+        np.testing.assert_allclose(
+            fl["model"], 2.0 * cfg.active_param_count() * shape.global_batch)
+
+    def test_decode_memory_weights_plus_kv(self):
+        cfg = get_config("command-r-35b")
+        shape = INPUT_SHAPES["decode_32k"]
+        got = analytic_hbm_bytes(cfg, shape)
+        w = cfg.param_count() * 2
+        kv = (shape.global_batch * shape.seq_len * cfg.kv_dim * 2 * 2
+              * cfg.num_layers)
+        assert got >= w + kv          # both terms present
+        assert got < 1.5 * (w + kv)   # nothing spurious dominates
+
+    def test_roofline_report_fields(self):
+        cfg = get_config("olmo-1b")
+        shape = INPUT_SHAPES["train_4k"]
+        rl = build_roofline(cfg, shape, "16x16", 256, SYNTHETIC_HLO,
+                            {"flops": 1e12}, None)
+        row = rl.row()
+        for k in ("t_compute_s", "t_memory_s", "t_collective_s", "dominant",
+                  "model_ratio", "collectives"):
+            assert k in row
+        assert row["dominant"] in ("compute", "memory", "collective")
+        assert 0 < row["model_ratio"] <= 1.0

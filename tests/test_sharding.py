@@ -1,0 +1,109 @@
+"""Sharding-rule tests: spec trees must cover the param trees exactly and
+respect divisibility, for every assigned arch on both production meshes.
+
+Uses a FAKE mesh object (duck-typed: .axis_names + .shape) so the main
+pytest process never touches jax device state — the actual lower/compile of
+every combination is exercised by launch/dryrun.py (reports/dryrun/).
+"""
+
+from types import SimpleNamespace
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.dist.sharding import batch_axes, param_specs
+from repro.models.transformer import init_params
+
+
+def fake_mesh(shape_dict):
+    return SimpleNamespace(axis_names=tuple(shape_dict),
+                           shape=dict(shape_dict),
+                           size=int(__import__("numpy").prod(
+                               list(shape_dict.values()))))
+
+
+MESHES = {
+    "16x16": {"data": 16, "model": 16},
+    "2x16x16": {"pod": 2, "data": 16, "model": 16},
+}
+
+
+def _spec_leaves(specs):
+    return jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+
+
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_specs_match_param_tree(arch, mesh_name):
+    cfg = get_config(arch + "-smoke")  # same tree structure, tiny leaves
+    full = get_config(arch)
+    mesh = fake_mesh(MESHES[mesh_name])
+    params = jax.eval_shape(lambda k: init_params(full, k),
+                            jax.ShapeDtypeStruct((2,), "uint32"))
+    specs = param_specs(full, mesh)
+    sd = jax.tree_util.tree_structure(params)
+    ss = jax.tree_util.tree_structure(specs,
+                                      is_leaf=lambda x: isinstance(x, P))
+    assert sd == ss, f"{arch} spec tree != param tree"
+    del cfg
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_specs_rank_and_divisibility(arch):
+    """Every spec dim must divide its tensor dim on the production mesh."""
+    full = get_config(arch)
+    mesh = fake_mesh(MESHES["2x16x16"])
+    params = jax.eval_shape(lambda k: init_params(full, k),
+                            jax.ShapeDtypeStruct((2,), "uint32"))
+    specs = param_specs(full, mesh)
+    leaves = jax.tree_util.tree_leaves(params)
+    spec_leaves = _spec_leaves(specs)
+    assert len(leaves) == len(spec_leaves)
+    for leaf, spec in zip(leaves, spec_leaves):
+        assert len(spec) <= len(leaf.shape), (leaf.shape, spec)
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            assert dim % n == 0, f"{arch}: dim {dim} % {axes} ({n}) != 0"
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x22b", "arctic-480b"])
+def test_expert_weights_expert_parallel(arch):
+    """MoE expert weight tables shard experts over data axes when E divides."""
+    full = get_config(arch)
+    mesh = fake_mesh(MESHES["16x16"])
+    specs = param_specs(full, mesh)
+    wg = specs["layers"]["moe"]["w_gate"]
+    E = full.moe.num_experts
+    if E % 16 == 0:  # arctic: 128 % 16 == 0 -> expert parallel
+        ax = tuple(wg)[1]
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        assert "data" in axes
+    else:            # mixtral: 8 experts -> FSDP fallback on d_model
+        assert tuple(wg)[1] is None
+
+
+def test_batch_axes():
+    assert batch_axes(fake_mesh(MESHES["16x16"])) == ("data",)
+    assert batch_axes(fake_mesh(MESHES["2x16x16"])) == ("pod", "data")
+    assert batch_axes(None) == ("data",)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_tp_spec_targets_model_axis(arch):
+    """At least the big matmuls must be TP-sharded over 'model'."""
+    full = get_config(arch)
+    mesh = fake_mesh(MESHES["16x16"])
+    specs = param_specs(full, mesh)
+    flat = _spec_leaves(specs)
+    uses_model = any("model" in [a for ax in tuple(s) if ax is not None
+                                 for a in (ax if isinstance(ax, tuple) else (ax,))]
+                     for s in flat)
+    assert uses_model, f"{arch} has no tensor parallelism at all"

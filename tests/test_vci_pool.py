@@ -1,0 +1,130 @@
+"""Unit tests for the VCI pool and CommContext registry (paper §4.2)."""
+
+import pytest
+
+from repro.core.comm import CommContext, CommWorld
+from repro.core.vci import POLICIES, VCI, VCIPool
+
+
+class TestVCIPool:
+    def test_fcfs_assigns_distinct_then_fallback(self):
+        pool = VCIPool(num_vcis=4, policy="fcfs")
+        got = [pool.acquire(f"c{i}").index for i in range(6)]
+        # 3 free interfaces (0 is the fallback), then fallback hits
+        assert sorted(got[:3]) == [1, 2, 3]
+        assert got[3:] == [VCIPool.FALLBACK] * 3
+        assert pool.stats.fallback_hits == 3
+
+    def test_release_returns_vci_to_pool(self):
+        pool = VCIPool(num_vcis=2, policy="fcfs")
+        v = pool.acquire("a")
+        assert v.index == 1
+        assert pool.acquire("b").index == VCIPool.FALLBACK  # exhausted
+        pool.release("a")
+        assert pool.acquire("c").index == 1                  # recycled
+
+    def test_fallback_never_released_to_pool(self):
+        pool = VCIPool(num_vcis=2, policy="fcfs")
+        pool.acquire("a")            # takes 1
+        pool.acquire("b")            # fallback
+        pool.release("b")
+        # releasing a fallback-mapped context must not free interface 0
+        assert pool.acquire("c").index == VCIPool.FALLBACK
+
+    def test_round_robin_cycles_nonfallback(self):
+        pool = VCIPool(num_vcis=3, policy="round_robin")
+        got = [pool.acquire(f"c{i}").index for i in range(5)]
+        assert got == [1, 2, 1, 2, 1]
+
+    def test_hash_is_deterministic(self):
+        a = VCIPool(num_vcis=8, policy="hash")
+        b = VCIPool(num_vcis=8, policy="hash")
+        for name in ("alpha", "beta", "gamma"):
+            assert a.acquire(name).index == b.acquire(name).index
+
+    def test_hinted_policy(self):
+        pool = VCIPool(num_vcis=3, policy="hinted")
+        assert pool.acquire("bg").index == VCIPool.FALLBACK      # unhinted
+        h1 = pool.acquire("hot1", hint="dedicated").index
+        h2 = pool.acquire("hot2", hint="dedicated").index
+        assert {h1, h2} == {1, 2}  # dedicated interfaces, order unspecified
+        assert pool.acquire("hot3", hint="dedicated").index == VCIPool.FALLBACK
+
+    def test_shared_hint_forces_fallback(self):
+        pool = VCIPool(num_vcis=4, policy="fcfs")
+        assert pool.acquire("x", hint="shared").index == VCIPool.FALLBACK
+
+    def test_double_acquire_rejected(self):
+        pool = VCIPool(num_vcis=2)
+        pool.acquire("a")
+        with pytest.raises(KeyError):
+            pool.acquire("a")
+
+    def test_invalid_args(self):
+        with pytest.raises(ValueError):
+            VCIPool(num_vcis=0)
+        with pytest.raises(ValueError):
+            VCIPool(num_vcis=2, policy="nope")
+
+    def test_stats_track_max_contexts(self):
+        pool = VCIPool(num_vcis=2, policy="fcfs")
+        for i in range(4):
+            pool.acquire(f"c{i}")
+        # one on VCI 1, three on the fallback
+        assert pool.stats.max_contexts_per_vci == 3
+        assert pool.stats.acquires == 4
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_indices_always_in_range(self, policy):
+        pool = VCIPool(num_vcis=4, policy=policy)
+        for i in range(20):
+            idx = pool.acquire(f"c{i}", hint="dedicated").index
+            assert 0 <= idx < 4
+
+
+class TestCommWorld:
+    def test_world_holds_fallback(self):
+        w = CommWorld(num_vcis=4)
+        assert w.world.vci.index == VCIPool.FALLBACK
+
+    def test_create_and_free_cycles_vcis(self):
+        w = CommWorld(num_vcis=3)
+        c1 = w.create("a")
+        c2 = w.create("b")
+        assert {c1.vci.index, c2.vci.index} == {1, 2}
+        c3 = w.create("c")
+        assert c3.vci.index == VCIPool.FALLBACK   # Fig. 17 collision
+        w.free(c1)
+        c4 = w.create("d")
+        assert c4.vci.index == c1.vci.index
+
+    def test_vci_pinning_is_endpoint_mode(self):
+        w = CommWorld(num_vcis=4)
+        c = w.create("ep", vci=3)
+        assert c.pinned and c.vci.index == 3
+        # pinning bypasses the pool: the pool can still hand out vci 3
+        got = {w.create(f"x{i}").vci.index for i in range(3)}
+        assert 3 in got
+        with pytest.raises(ValueError):
+            w.create("bad", vci=99)
+
+    def test_split_creates_subcontexts(self):
+        w = CommWorld(num_vcis=8)
+        parent = w.create("p", kind="rma", accumulate_ordering="none")
+        subs = w.split(parent, 3)
+        assert len(subs) == 3
+        assert all(s.kind == "rma" for s in subs)
+        assert all(s.accumulate_ordering == "none" for s in subs)
+        assert len({s.vci.index for s in subs}) == 3  # independent streams
+
+    def test_kind_validation(self):
+        with pytest.raises(AssertionError):
+            CommContext("x", VCI(0), kind="bogus")
+        with pytest.raises(AssertionError):
+            CommContext("x", VCI(0), kind="rma", accumulate_ordering="bogus")
+
+    def test_duplicate_name_rejected(self):
+        w = CommWorld()
+        w.create("dup")
+        with pytest.raises(KeyError):
+            w.create("dup")
