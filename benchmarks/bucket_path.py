@@ -1,0 +1,172 @@
+"""Bucketed-gradient fast-path ablation — this repo's §4.3 analogue.
+
+Three orthogonal knobs x the real ``reduce_gradients`` hot path on a
+gradient-shaped pytree (a model parameter tree with the layer stack
+unstacked into per-layer leaves — the DDP many-small-messages regime the
+paper's message-rate story is about):
+
+* ``plan``       per_step (seed: rebuild BucketPlan + CommWorld + contexts
+                 inside every trace) vs persistent (``get_comm_plan`` cache
+                 — the per-VCI request-cache analogue).
+* ``pack``       xla (O(leaves) concat chain per bucket) vs pallas (the
+                 tile/slot-aligned DMA layout: ``bucket_pack_pallas`` /
+                 ``bucket_unpack_pallas`` tile-gather kernels on TPU,
+                 per-slot dynamic_update_slice DMA writes off-TPU).
+* ``reduction``  all_reduce vs reduce_scatter + all_gather per bucket.
+
+Reported per cell:
+
+* ``ms_per_step``  — compiled steady-state wall clock per step (median).
+  The headline: on the 8-device CPU mesh the concat-chain pack
+  materializes a copy per operand and dominates the step, so the
+  pallas/DMA layout roughly halves the step (see BENCH_bucket_path.json).
+* ``trace_ms``     — re-trace cost (jit cache miss): what every retrace
+  (new batch shape, knob change) pays; the persistent plan's cached
+  plan/world/tables are amortized here.
+* ``collectives`` / ``critical_depth`` / ``link_bytes`` — structural
+  metrics from the compiled HLO (hardware-independent; reduce_scatter's
+  wire-byte story transfers to the TPU target even where CPU wall clock
+  does not move).
+
+Emits ``BENCH_bucket_path.json`` via :func:`benchmarks.common.emit_json`
+with a summary comparing the seed cell (xla / all_reduce / per_step) to the
+fast cell (pallas / all_reduce / persistent).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import CSV, SMOKE, block, emit_json, mesh_1d, time_fn
+from repro.compat import shard_map
+from repro.core import get_comm_plan, plan_cache_clear, plan_cache_stats, \
+    reduce_gradients
+from repro.launch.roofline import collective_critical_depth, parse_collectives
+
+
+def grads_tree(arch: str, layers: int, seed: int = 0):
+    """A gradient-shaped pytree: the arch's param shapes with the layer
+    stack unstacked to ``layers`` per-layer leaves (DDP message regime)."""
+    from repro.configs import get_config
+    from repro.models.transformer import init_params
+
+    cfg = get_config(arch)
+    struct = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), np.uint32))
+    rng = np.random.default_rng(seed)
+    tree = {}
+
+    def add(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if name.startswith("layers"):
+            for i in range(layers):  # unstack (and synthesize depth)
+                tree[f"{name}/{i}"] = jnp.asarray(
+                    rng.normal(size=leaf.shape[1:]) * 1e-2, jnp.float32)
+        else:
+            tree[name] = jnp.asarray(
+                rng.normal(size=leaf.shape) * 1e-2, jnp.float32)
+
+    jax.tree_util.tree_map_with_path(add, struct)
+    return tree
+
+
+def make_step(mesh, tree, *, pack: str, reduction: str, persistent: bool,
+              streams: int):
+    spec_in = jax.tree_util.tree_map(lambda _: P(), tree)
+
+    def run(tr):
+        cp = get_comm_plan(tr, num_streams=streams, num_vcis=streams + 1,
+                           pack=pack, token_impl="data",
+                           persistent=persistent)
+        rt = cp.runtime()
+        red = reduce_gradients(rt, tr, cp, axis="data", mean=True,
+                               pack=pack, reduction=reduction)
+        return rt.barrier(red)
+
+    return shard_map(run, mesh=mesh, in_specs=(spec_in,),
+                     out_specs=spec_in, check_vma=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--streams", type=int, default=4)
+    ap.add_argument("--arch", default="olmo-1b-smoke")
+    ap.add_argument("--layers", type=int, default=8,
+                    help="unstacked layer count (synthetic depth)")
+    ap.add_argument("--trace-reps", type=int, default=4)
+    args = ap.parse_args()
+
+    mesh = mesh_1d(args.devices)
+    tree = grads_tree(args.arch, args.layers)
+    n_leaves = len(jax.tree_util.tree_leaves(tree))
+    n_elems = sum(l.size for l in jax.tree_util.tree_leaves(tree))
+    print(f"# grads: {n_leaves} leaves, {n_elems / 1e6:.2f}M f32 elements, "
+          f"{args.streams} streams, {mesh.size} devices")
+
+    csv = CSV("bucket_path")
+    rows = []
+    trace_reps = 2 if SMOKE else args.trace_reps
+    for pack in ("xla", "pallas"):
+        for reduction in ("all_reduce", "reduce_scatter"):
+            for plan_mode in ("per_step", "persistent"):
+                persistent = plan_mode == "persistent"
+                plan_cache_clear()
+                f = make_step(mesh, tree, pack=pack, reduction=reduction,
+                              persistent=persistent, streams=args.streams)
+                jf = jax.jit(f)
+                hlo = jf.lower(tree).compile().as_text()
+                jf(tree)  # warm
+                t_jit = time_fn(lambda: block(jf(tree)), warmup=2, reps=10)
+                # retrace cost (jit cache miss): fresh wrapper => full trace
+                t_trace = time_fn(
+                    lambda: jax.jit(lambda tr: f(tr)).lower(tree),
+                    warmup=1, reps=trace_reps, min_time_s=0.0)
+                d = collective_critical_depth(hlo)
+                link_bytes = sum(op.link_bytes
+                                 for op in parse_collectives(hlo, mesh.size))
+                row = dict(pack=pack, reduction=reduction, plan=plan_mode,
+                           ms_per_step=t_jit["median_s"] * 1e3,
+                           ms_per_step_min=t_jit["min_s"] * 1e3,
+                           trace_ms=t_trace["median_s"] * 1e3,
+                           collectives=d["collective_count"],
+                           critical_depth=d["critical_depth"],
+                           link_bytes=link_bytes,
+                           plan_cache=str(plan_cache_stats()))
+                csv.add(**row)
+                rows.append(row)
+    csv.dump()
+
+    def cell(pack, reduction, plan):
+        return next(r for r in rows if r["pack"] == pack and
+                    r["reduction"] == reduction and r["plan"] == plan)
+
+    seed = cell("xla", "all_reduce", "per_step")
+    fast = cell("pallas", "all_reduce", "persistent")
+    best = min(rows, key=lambda r: r["ms_per_step"])
+    summary = {
+        "seed_config": {k: seed[k] for k in ("pack", "reduction", "plan")},
+        "fast_config": {k: fast[k] for k in ("pack", "reduction", "plan")},
+        "seed_ms_per_step": seed["ms_per_step"],
+        "fast_ms_per_step": fast["ms_per_step"],
+        "step_speedup": seed["ms_per_step"] / fast["ms_per_step"],
+        "seed_trace_ms": seed["trace_ms"],
+        "fast_trace_ms": fast["trace_ms"],
+        "trace_speedup": seed["trace_ms"] / fast["trace_ms"],
+        "best_config": {k: best[k] for k in ("pack", "reduction", "plan")},
+        "best_ms_per_step": best["ms_per_step"],
+    }
+    print(f"# summary: seed {summary['seed_ms_per_step']:.2f} ms/step -> "
+          f"fast {summary['fast_ms_per_step']:.2f} ms/step "
+          f"({summary['step_speedup']:.2f}x step, "
+          f"{summary['trace_speedup']:.2f}x retrace)")
+    emit_json("bucket_path", {"rows": rows, "summary": summary})
+
+
+if __name__ == "__main__":
+    main()

@@ -17,11 +17,20 @@ remove. On TPU the zero-copy "barrier" impl is the default.
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, Dict, List, Optional
 
 import jax
 import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# BENCH_SMOKE=1 (set by ``benchmarks.run --smoke``) clamps every timing loop
+# to 2 iterations so the perf code paths execute end-to-end under pytest
+# without paying for statistically meaningful medians.
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0") or "0"))
 
 
 def mesh_1d(n: Optional[int] = None, name: str = "data"):
@@ -39,6 +48,8 @@ def mesh_1d(n: Optional[int] = None, name: str = "data"):
 def time_fn(fn: Callable[[], object], *, warmup: int = 3, reps: int = 10,
             min_time_s: float = 0.2) -> Dict[str, float]:
     """Median wall-time of ``fn()`` (which must block until done)."""
+    if SMOKE:
+        warmup, reps, min_time_s = 1, 2, 0.0
     for _ in range(warmup):
         fn()
     times: List[float] = []
@@ -93,3 +104,30 @@ def _fmt(v) -> str:
     if isinstance(v, float):
         return f"{v:.6g}"
     return str(v)
+
+
+def emit_json(name: str, payload: Dict, out_dir: Optional[str] = None) -> str:
+    """Write ``BENCH_<name>.json`` (repo root by default) and return the path.
+
+    The JSON artifacts are the machine-readable counterpart of the CSV
+    stdout streams: ``{"benchmark": ..., "env": {...}, **payload}``.
+    ``BENCH_JSON_DIR`` redirects the output (pytest smoke runs use a tmp
+    dir so the committed artifacts keep their full-run numbers).
+    """
+    out_dir = out_dir or os.environ.get("BENCH_JSON_DIR") or REPO
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    doc = {
+        "benchmark": name,
+        "env": {
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "jax": jax.__version__,
+            "smoke": SMOKE,
+        },
+    }
+    doc.update(payload)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=False)
+        f.write("\n")
+    print(f"# wrote {path}", flush=True)
+    return path

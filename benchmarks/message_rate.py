@@ -22,22 +22,41 @@ Reported: million messages/s (aggregate) + the token-dependency depth
 from __future__ import annotations
 
 import argparse
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from benchmarks.common import CSV, block, mesh_1d, time_fn
+from benchmarks.common import CSV, SMOKE, block, mesh_1d, time_fn
 from repro.core.collectives import CommRuntime
 from repro.core.comm import CommWorld
+from repro.compat import shard_map
 
 OPS_PER_STREAM = 16
 
 
+def _issue(rt, v, ctx, *, collective: str, rma: bool, perm, n: int):
+    """One message on ``ctx``'s stream: the p2p/RMA pair of the original
+    figures, or the bucketed-reduction fast path's collectives
+    (``all_reduce`` vs ``reduce_scatter``+``all_gather``) so the per-message
+    software overhead of the gradient hot path is measured with the same
+    stream/token machinery. Reductions are normalized by ``n`` (mean) so
+    chained ops keep O(1) values — without it the 16-deep chain grows n^16
+    and overflows f32 at high device counts — and so every mode (including
+    the token-free ``everywhere`` baseline) runs the same program."""
+    if collective == "all_reduce":
+        return rt.all_reduce(v, ctx, axis="data") / n
+    if collective == "reduce_scatter":
+        shard = rt.reduce_scatter(v, ctx, axis="data") / n
+        return rt.all_gather(shard, ctx, axis="data")
+    if rma:
+        return rt.put(v, ctx, axis="data", perm=perm)
+    return rt.sendrecv(v, ctx, axis="data", perm=perm)
+
+
 def build_step(mode: str, n_streams: int, msg_elems: int, *, rma: bool,
-               mesh, no_token: bool = False):
+               mesh, no_token: bool = False, collective: str = "sendrecv"):
     """Returns a jitted step issuing n_streams x OPS_PER_STREAM messages."""
     n = mesh.size
     perm = [(i, (i + 1) % n) for i in range(n)]
@@ -50,7 +69,14 @@ def build_step(mode: str, n_streams: int, msg_elems: int, *, rma: bool,
             for s in range(n_streams):
                 v = x[s]
                 for _ in range(OPS_PER_STREAM):
-                    v = jax.lax.ppermute(v, "data", perm)
+                    if collective == "all_reduce":
+                        v = jax.lax.psum(v, "data") / n
+                    elif collective == "reduce_scatter":
+                        v = jax.lax.all_gather(
+                            jax.lax.psum_scatter(v, "data", tiled=True) / n,
+                            "data", tiled=True)
+                    else:
+                        v = jax.lax.ppermute(v, "data", perm)
                 outs.append(v)
             return jnp.stack(outs)
 
@@ -85,15 +111,13 @@ def build_step(mode: str, n_streams: int, msg_elems: int, *, rma: bool,
         for s in range(n_streams):
             v = x[s]
             for _ in range(OPS_PER_STREAM):
-                if rma:
-                    v = rt.put(v, ctxs[s], axis="data", perm=perm)
-                else:
-                    v = rt.sendrecv(v, ctxs[s], axis="data", perm=perm)
+                v = _issue(rt, v, ctxs[s], collective=collective, rma=rma,
+                           perm=perm, n=n)
             outs.append(v)
         return rt.barrier(jnp.stack(outs))
 
-    f = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=P(None, None),
-                              out_specs=P(None, None), check_vma=False))
+    f = jax.jit(shard_map(step, mesh=mesh, in_specs=P(None, None),
+                          out_specs=P(None, None), check_vma=False))
     x = jnp.ones((n_streams, msg_elems), jnp.float32)
     hlo = f.lower(x).compile().as_text()
     f(x)  # warm
@@ -109,6 +133,11 @@ def main():
     ap.add_argument("--rma", action="store_true", help="MPI_Put (Figs 13/14)")
     ap.add_argument("--no-token", action="store_true",
                     help="Fig 12: disable locking/atomics analogue")
+    ap.add_argument("--collective", default="sendrecv",
+                    choices=("sendrecv", "all_reduce", "reduce_scatter"),
+                    help="per-stream message type: the p2p pair of the "
+                         "original figures, or the gradient fast path's "
+                         "all_reduce vs reduce_scatter+all_gather")
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--sizes", type=int, nargs="*",
                     default=[2, 512, 8192])   # 8B .. 32KB messages
@@ -117,6 +146,12 @@ def main():
     args = ap.parse_args()
 
     mesh = mesh_1d(args.devices)
+    if SMOKE:
+        args.sizes = args.sizes[:1]
+        args.streams = [s for s in args.streams if s in (1, max(args.streams))]
+    if args.collective == "reduce_scatter":
+        # psum_scatter needs the message length to divide the axis size
+        args.sizes = [-(-m // mesh.size) * mesh.size for m in args.sizes]
     name = "message_rate" + ("_rma" if args.rma else "")
     csv = CSV(name)
 
@@ -127,14 +162,16 @@ def main():
             for mode in MODES:
                 f, x, hlo = build_step(mode, ns, msg, rma=args.rma, mesh=mesh,
                                        no_token=args.no_token and
-                                       mode == "par_comm+vcis")
+                                       mode == "par_comm+vcis",
+                                       collective=args.collective)
                 t = time_fn(lambda: block(f(x)))
                 n_msgs = ns * OPS_PER_STREAM * mesh.size
                 d = collective_critical_depth(hlo)
                 # projected rate on a parallel network: depth is the serial
                 # bottleneck, so rate scales with ops/depth (the structural
                 # analogue of the paper's thread-scaling curves)
-                csv.add(mode=mode, streams=ns, msg_bytes=msg * 4,
+                csv.add(mode=mode, collective=args.collective, streams=ns,
+                        msg_bytes=msg * 4,
                         mmsgs_per_s=n_msgs / t["median_s"] / 1e6,
                         us_per_step=t["median_s"] * 1e6,
                         critical_depth=d["critical_depth"],

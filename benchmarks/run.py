@@ -34,6 +34,8 @@ BENCHMARKS = [
     ("benchmarks.bspmm", [], 8, "Fig 27 (BSPMM accumulate)"),
     ("benchmarks.trainer_streams", [], 8,
      "paper claim at the trainer API level (VCI grad streams)"),
+    ("benchmarks.bucket_path", [], 8,
+     "fast bucketed-reduction path: plan x pack x reduction ablation"),
 ]
 
 
@@ -41,6 +43,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on the module name")
+    ap.add_argument("--smoke", action="store_true",
+                    help="2-iteration timing loops (BENCH_SMOKE=1): executes "
+                         "every perf path end-to-end without full medians — "
+                         "the mode the test suite runs under pytest")
     ap.add_argument("--out", default=os.path.join(REPO, "reports", "bench"))
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
@@ -54,6 +60,8 @@ def main() -> None:
         print(f"\n=== {tag}  [{figure}]  ({devices} devices) ===", flush=True)
         env = dict(os.environ)
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+        if args.smoke:
+            env["BENCH_SMOKE"] = "1"
         env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
             env.get("PYTHONPATH", "")
         t0 = time.time()

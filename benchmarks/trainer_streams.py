@@ -6,6 +6,10 @@ gradient pytree onto K CommContexts; this sweeps K and the progress model
 and reports the compiled step's collective structure + wall clock. The
 paper's story at this level: serialized streams (global progress) keep
 K chained reductions; independent streams let XLA combine/overlap them.
+
+The fast-path knobs ride along: ``--pack``/``--reduction``/``--per-step-plan``
+select the bucketed-reduction implementation (see ``benchmarks.bucket_path``
+for the dedicated 3-knob ablation of that hot path).
 """
 
 from __future__ import annotations
@@ -14,7 +18,8 @@ import argparse
 
 import jax
 
-from benchmarks.common import CSV, block, mesh_1d, time_fn
+from benchmarks.common import CSV, SMOKE, block, mesh_1d, time_fn
+from repro.compat import set_mesh
 from repro.configs import get_config
 from repro.data.pipeline import synthetic_batch
 from repro.launch.roofline import collective_critical_depth
@@ -24,27 +29,38 @@ from repro.train.trainer import make_train_step, train_state_init
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--pack", default="xla", choices=("xla", "pallas"))
+    ap.add_argument("--reduction", default="all_reduce",
+                    choices=("all_reduce", "reduce_scatter"))
+    ap.add_argument("--per-step-plan", action="store_true",
+                    help="seed behaviour: rebuild the comm plan every trace")
     args = ap.parse_args()
     mesh = mesh_1d(args.devices)
     cfg = get_config("olmo-1b-smoke")
     batch = synthetic_batch(cfg, 2 * mesh.size, 32, seed=0)
     state = train_state_init(cfg, jax.random.PRNGKey(0))
 
+    progresses = ("hybrid",) if SMOKE else ("global", "hybrid", "per_vci")
+    stream_counts = (1, 4) if SMOKE else (1, 2, 4, 8)
+
     csv = CSV("trainer_vci_streams")
-    for progress in ("global", "hybrid", "per_vci"):
-        for streams in (1, 2, 4, 8):
+    for progress in progresses:
+        for streams in stream_counts:
             step = make_train_step(cfg, mesh=mesh, comm="vci",
                                    num_streams=streams,
                                    num_vcis=streams + 1,
-                                   progress=progress, token_impl="data")
-            with jax.set_mesh(mesh):
+                                   progress=progress, token_impl="data",
+                                   pack=args.pack, reduction=args.reduction,
+                                   persistent_plan=not args.per_step_plan)
+            with set_mesh(mesh):
                 jitted = jax.jit(step)
                 compiled = jitted.lower(state, batch).compile()
                 hlo = compiled.as_text()
                 jitted(state, batch)
                 t = time_fn(lambda: block(jitted(state, batch)), reps=5)
             d = collective_critical_depth(hlo)
-            csv.add(progress=progress, streams=streams,
+            csv.add(progress=progress, streams=streams, pack=args.pack,
+                    reduction=args.reduction,
                     ms_per_step=t["median_s"] * 1e3,
                     collectives=d["collective_count"],
                     critical_depth=d["critical_depth"])

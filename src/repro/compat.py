@@ -1,0 +1,85 @@
+"""JAX version compatibility shims.
+
+The repo targets the modern ``jax.shard_map`` / ``jax.set_mesh`` surface;
+older jaxlibs (e.g. 0.4.x) only ship ``jax.experimental.shard_map`` with the
+``check_rep``/``auto`` spelling and no ambient-mesh setter. Every call site
+imports from here so the rest of the codebase is written against ONE
+(modern) API:
+
+* :func:`shard_map` — keyword-only ``mesh``/``in_specs``/``out_specs`` plus
+  ``check_vma`` (mapped to ``check_rep`` on old jax) and ``axis_names`` (the
+  manual axes; mapped to the complement ``auto`` frozenset on old jax).
+* :func:`set_mesh` — context manager; ``jax.set_mesh`` when present, else the
+  legacy ``with mesh:`` global-mesh context (a no-op for code that passes
+  meshes explicitly, which this repo does).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional, Set
+
+import jax
+
+__all__ = ["axis_size", "make_mesh", "shard_map", "set_mesh",
+           "tpu_compiler_params"]
+
+
+def make_mesh(shape, axes, *, explicit: bool = False):
+    """``jax.make_mesh`` with ``axis_types`` only where the version has it."""
+    if hasattr(jax.sharding, "AxisType"):
+        kind = (jax.sharding.AxisType.Explicit if explicit
+                else jax.sharding.AxisType.Auto)
+        return jax.make_mesh(shape, axes, axis_types=(kind,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def axis_size(axis) -> int:
+    """``lax.axis_size`` (modern) with a legacy fallback: ``psum(1, axis)``
+    constant-folds to the mapped axis size inside shard_map/pmap traces."""
+    from jax import lax
+
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis)
+    return lax.psum(1, axis)
+
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+                  axis_names: Optional[Set[Any]] = None):
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma,
+                             **kwargs)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+                  axis_names: Optional[Set[Any]] = None):
+        auto: frozenset = frozenset()
+        if axis_names is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        return _shard_map_legacy(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma,
+                                 auto=auto)
+
+
+def set_mesh(mesh):
+    """``with set_mesh(mesh): ...`` — ambient mesh on any jax version."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if mesh is None:
+        return contextlib.nullcontext()
+    return mesh  # Mesh is a context manager on legacy jax (global mesh)
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (modern) / ``TPUCompilerParams`` (legacy)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

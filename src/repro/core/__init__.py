@@ -6,14 +6,22 @@ Public API:
     CommRuntime, Request      — stream-tagged collectives (§4.3)
     ProgressEngine            — global | per_vci | hybrid progress (§4.1/4.3)
     plan_buckets, reduce_gradients — gradient→VCI bucketing (training integration)
+    CommPlan, get_comm_plan   — persistent comm plans (the fast path):
+                                cached BucketPlan + CommWorld + contexts +
+                                pallas pack tables per (treedef, shapes, knobs)
 """
 
 from repro.core.bucketing import (
     Bucket,
     BucketPlan,
+    CommPlan,
     TILE,
+    comm_plan_key,
+    get_comm_plan,
     pack_bucket,
     plan_buckets,
+    plan_cache_clear,
+    plan_cache_stats,
     reduce_gradients,
     unpack_bucket,
 )
@@ -30,8 +38,10 @@ from repro.core.progress import (
 from repro.core.vci import POLICIES, VCI, VCIPool
 
 __all__ = [
-    "Bucket", "BucketPlan", "TILE", "pack_bucket", "plan_buckets",
-    "reduce_gradients", "unpack_bucket", "CommRuntime", "Request",
-    "CommContext", "CommWorld", "PROGRESS_MODES", "ProgressEngine", "after",
-    "fresh_token", "join_tokens", "token_after", "POLICIES", "VCI", "VCIPool",
+    "Bucket", "BucketPlan", "CommPlan", "TILE", "comm_plan_key",
+    "get_comm_plan", "pack_bucket", "plan_buckets", "plan_cache_clear",
+    "plan_cache_stats", "reduce_gradients", "unpack_bucket", "CommRuntime",
+    "Request", "CommContext", "CommWorld", "PROGRESS_MODES", "ProgressEngine",
+    "after", "fresh_token", "join_tokens", "token_after", "POLICIES", "VCI",
+    "VCIPool",
 ]

@@ -1,0 +1,11 @@
+"""repro.dist — mesh/axis bookkeeping and sharding rules.
+
+Public API:
+    Sharder                 — activation/weight sharding-constraint helper
+    batch_axes, data_axes   — the mesh's data-parallel axes
+    param_specs             — PartitionSpec tree mirroring a config's params
+"""
+
+from repro.dist.sharding import Sharder, batch_axes, data_axes, param_specs
+
+__all__ = ["Sharder", "batch_axes", "data_axes", "param_specs"]

@@ -1,0 +1,245 @@
+"""Sharding rules: TP(model) x FSDP(data/pod) parameter layout + activation
+constraints.
+
+One rule table drives three consumers:
+
+* :func:`param_specs` — a ``PartitionSpec`` tree that mirrors a config's
+  parameter tree exactly (used by ``launch/inputs.py`` to build
+  ``NamedSharding`` trees for the dry-run and by ``tests/test_sharding.py``);
+* :meth:`Sharder.materialize` — the ZeRO/FSDP weight gather: inside the
+  traced step each layer's weights are constrained to their TP-only spec
+  (FSDP axes dropped), so XLA inserts the all-gather right before use;
+* the activation constraint helpers (``hidden`` / ``heads`` / ``kv_cache`` /
+  ``ffn_hidden`` / ``logits`` / ``act``) used throughout the model code.
+
+Every axis assignment is divisibility-guarded: an axis (or axis tuple) is
+attached to a tensor dim only when the dim divides the axis product, so the
+same rules hold on any mesh (16x16, 2x16x16, 1-D CPU test meshes, or the
+duck-typed fake meshes the sharding tests use).
+
+Axis convention: ``model`` is the tensor-parallel axis; every other mesh
+axis (``data``, ``pod``) is data-parallel — :func:`batch_axes` returns them
+in mesh order.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+AxisLike = Union[None, str, Tuple[str, ...]]
+
+# model goes on the LAST dim (column-parallel) for these weight names, on
+# dim -2 (row-parallel) for the _TP_ROW names; biases follow their matmul.
+_TP_COL = frozenset({"wq", "wk", "wv", "w_gate", "w_up", "in_proj"})
+_TP_ROW = frozenset({"wo", "w_down", "out_proj"})
+_TP_BIAS = frozenset({"bq", "bk", "bv", "b_up"})
+
+
+# ---------------------------------------------------------------------------
+# mesh introspection (works on real Mesh, duck-typed fakes, and None)
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel mesh axes, in mesh order (everything but model)."""
+    if mesh is None:
+        return ("data",)
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def data_axes(mesh, cfg: Optional[ModelConfig] = None) -> Tuple[str, ...]:
+    """Axes the batch dimension shards over (cfg hook for future overrides)."""
+    return batch_axes(mesh)
+
+
+def _axis_size(mesh, ax: AxisLike) -> int:
+    if mesh is None or ax is None:
+        return 1
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    n = 1
+    for a in axes:
+        n *= dict(mesh.shape).get(a, 1)
+    return n
+
+
+def _dp_entry(dp: Tuple[str, ...]) -> AxisLike:
+    return dp[0] if len(dp) == 1 else tuple(dp)
+
+
+# ---------------------------------------------------------------------------
+# the parameter rule table
+# ---------------------------------------------------------------------------
+
+def _leaf_spec(mesh, keys: Sequence[str], shape: Tuple[int, ...], *,
+               stacked: bool, fsdp: bool = True) -> P:
+    """PartitionSpec for one parameter leaf, selected by its tree path.
+
+    ``stacked`` marks a leading layer-stack dim (always unsharded).
+    ``fsdp=False`` drops the data-axis weight sharding (TP-only spec) — the
+    materialize/ZeRO-gather view. Expert-parallel dims on MoE expert tables
+    are kept either way (they are parallelism, not storage sharding).
+    """
+    nd = len(shape)
+    spec: list = [None] * nd
+    if nd == 0:
+        return P()
+    lead = 1 if stacked else 0
+    dp = batch_axes(mesh)
+    dpn = _axis_size(mesh, tuple(dp))
+    tp = _axis_size(mesh, "model")
+    name = keys[-1]
+    parent = keys[-2] if len(keys) >= 2 else ""
+
+    def model_ok(dim: int) -> bool:
+        return tp > 1 and dim >= lead and shape[dim] % tp == 0
+
+    def dp_ok(dim: int) -> bool:
+        return fsdp and dpn > 1 and dim >= lead and shape[dim] % dpn == 0
+
+    if parent == "moe" and name in ("w_gate", "w_up", "w_down"):
+        # (..., E, a, b) expert tables: expert-parallel over the data axes
+        # when E divides (arctic 128 % 16), else the E dim stays unsharded
+        # (mixtral 8 on 16 — the FSDP fallback lands on d_model below).
+        e_dim = lead
+        if dpn > 1 and shape[e_dim] % dpn == 0:
+            spec[e_dim] = _dp_entry(dp)
+        ff_dim = nd - 1 if name in ("w_gate", "w_up") else nd - 2
+        if model_ok(ff_dim):
+            spec[ff_dim] = "model"
+        elif spec[e_dim] is None:
+            d_dim = nd - 2 if name in ("w_gate", "w_up") else nd - 1
+            if dp_ok(d_dim):
+                spec[d_dim] = _dp_entry(dp)
+    elif name == "router":
+        pass  # tiny, replicated
+    elif parent == "embed" and nd >= 2:           # (V, d) or (K, V, d)
+        if model_ok(nd - 2):
+            spec[nd - 2] = "model"                # vocab column-parallel
+        if dp_ok(nd - 1):
+            spec[nd - 1] = _dp_entry(dp)
+    elif parent in ("lm_head", "img_proj") and nd >= 2:
+        if model_ok(nd - 1):
+            spec[nd - 1] = "model"
+        if dp_ok(nd - 2):
+            spec[nd - 2] = _dp_entry(dp)
+    elif name in _TP_COL and nd >= 2:
+        if model_ok(nd - 1):
+            spec[nd - 1] = "model"
+        if dp_ok(nd - 2):
+            spec[nd - 2] = _dp_entry(dp)
+    elif name in _TP_ROW and nd >= 2:
+        if model_ok(nd - 2):
+            spec[nd - 2] = "model"
+        if dp_ok(nd - 1):
+            spec[nd - 1] = _dp_entry(dp)
+    elif name in _TP_BIAS:
+        if model_ok(nd - 1):
+            spec[nd - 1] = "model"
+    # everything else (norm scales, conv_w, A_log, D, dt_bias, ...) replicates
+    return P(*spec)
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(k, "key", getattr(k, "name", k))) for k in path)
+
+
+def param_specs(cfg: ModelConfig, mesh):
+    """A PartitionSpec tree with the exact structure of ``init_params(cfg)``."""
+    from repro.models.transformer import init_params  # avoid import cycle
+
+    struct = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), np.uint32))
+
+    def assign(path, leaf):
+        keys = _path_keys(path)
+        stacked = bool(keys) and keys[0] == "layers"
+        return _leaf_spec(mesh, keys, tuple(leaf.shape), stacked=stacked)
+
+    return jax.tree_util.tree_map_with_path(assign, struct)
+
+
+# ---------------------------------------------------------------------------
+# the activation/weight constraint helper
+# ---------------------------------------------------------------------------
+
+class Sharder:
+    """Sharding-constraint helper bound to one (mesh, config) pair.
+
+    With ``mesh=None`` every method is the identity — the same model code
+    runs unsharded in unit tests and sharded under the dry-run meshes.
+    """
+
+    def __init__(self, mesh: Optional[Mesh], cfg: ModelConfig):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.dp: Tuple[str, ...] = batch_axes(mesh)
+
+    # -- mesh arithmetic -------------------------------------------------
+    def _axsize(self, ax: AxisLike) -> int:
+        return _axis_size(self.mesh, ax)
+
+    def div(self, n: int, ax: AxisLike) -> bool:
+        """True when ``n`` can shard over ``ax`` (present, >1, divides)."""
+        sz = self._axsize(ax)
+        return sz > 1 and n % sz == 0
+
+    # -- raw constraint --------------------------------------------------
+    def act(self, x, *axes: AxisLike):
+        """Constrain ``x`` dim-by-dim; axes absent from the mesh drop out."""
+        if self.mesh is None:
+            return x
+        clean = tuple(a if self._axsize(a) > 1 else None for a in axes)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*clean)))
+
+    def _batch(self, n: int) -> AxisLike:
+        return _dp_entry(self.dp) if self.div(n, tuple(self.dp)) else None
+
+    # -- named activation sites ------------------------------------------
+    def hidden(self, x):
+        """(B, S, d) residual-stream activations: batch over data axes."""
+        return self.act(x, self._batch(x.shape[0]), *([None] * (x.ndim - 1)))
+
+    def heads(self, q):
+        """(B, S, H, hd): attention/SSM heads over model."""
+        h_ax = "model" if self.div(q.shape[2], "model") else None
+        return self.act(q, self._batch(q.shape[0]), None, h_ax, None)
+
+    def kv_cache(self, k):
+        """(B, S, KV, hd) stacked KV cache: KV heads over model when they
+        divide (see ``decode_kv_expand``), else unsharded heads."""
+        kv_ax = "model" if self.div(k.shape[2], "model") else None
+        return self.act(k, self._batch(k.shape[0]), None, kv_ax, None)
+
+    def ffn_hidden(self, h):
+        """(B, S, d_ff): the TP'd FFN inner dim."""
+        f_ax = "model" if self.div(h.shape[-1], "model") else None
+        return self.act(h, self._batch(h.shape[0]),
+                        *([None] * (h.ndim - 2)), f_ax)
+
+    def logits(self, logits):
+        """(B, S, V): vocab over model (column-parallel lm head)."""
+        v_ax = "model" if self.div(logits.shape[-1], "model") else None
+        return self.act(logits, self._batch(logits.shape[0]),
+                        *([None] * (logits.ndim - 2)), v_ax)
+
+    # -- weights ----------------------------------------------------------
+    def materialize(self, p):
+        """ZeRO/FSDP weight gather: constrain a (per-layer) param subtree to
+        its TP-only spec, so the data-axis shards all-gather right before
+        use and the gathered copy is freed after the layer."""
+        if self.mesh is None:
+            return p
+
+        def assign(path, leaf):
+            spec = _leaf_spec(self.mesh, _path_keys(path),
+                              tuple(leaf.shape), stacked=False, fsdp=False)
+            return jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(self.mesh, spec))
+
+        return jax.tree_util.tree_map_with_path(assign, p)

@@ -1,4 +1,4 @@
-"""Gradient-bucket packing — Pallas TPU (scalar prefetch).
+"""Gradient-bucket pack/unpack — Pallas TPU (scalar prefetch).
 
 The paper's per-VCI request cache keeps each stream's staging memory
 private; the training-loop analogue packs a bucket's gradient shards into
@@ -9,11 +9,28 @@ per concat operand; this kernel instead DMAs each destination tile
 straight from its source segment, driven by prefetched index tables (the
 same scalar-prefetch pattern as `moe_gather`).
 
+Both directions of the fast path live here:
+
+* :func:`bucket_pack_pallas`   — arena tiles -> one bucket's send buffer;
+* :func:`bucket_unpack_pallas` — reduced bucket buffers -> arena tiles
+  (the inverse DMA, same kernel body with the index tables swapped);
+* :func:`bucket_pack_gather` / :func:`bucket_unpack_gather` — the exact
+  vectorized-jnp lowering of the same tile-gather (one row gather + tail
+  mask); reference semantics on backends without a Pallas TPU pipeline.
+  (XLA:CPU scalarizes gathers, so ``reduce_gradients`` lowers the pack on
+  non-TPU backends to per-slot dynamic_update_slice DMA writes instead —
+  same layout contract, same bytes; see ``repro.core.bucketing``.)
+* :func:`bucket_pack_ref` / :func:`bucket_unpack_ref` — scalar jnp oracles
+  for the interpret-mode kernel tests.
+
 Layout contract: segments (leaf flats) sit at TILE-ALIGNED offsets in
 both the source arena and the destination buffer — the alignment the
 paper's "cache-line aware VCI" optimization prescribes (§4.3) and that
-``plan_buckets(align=TILE)`` produces. A destination tile therefore maps
-to exactly one source segment; tail tiles zero-fill past ``valid``.
+``plan_buckets(align=TILE, slot_align=TILE)`` produces. A destination tile
+therefore maps to exactly one source segment; tail tiles zero-fill past
+``valid``. Index tables are host-side numpy (:func:`build_tile_tables`,
+:func:`arena_layout`) so a persistent ``CommPlan`` can precompute them once
+per (treedef, shapes) and reuse them across steps and retraces.
 """
 
 from __future__ import annotations
@@ -90,6 +107,22 @@ def bucket_pack_pallas(src: jax.Array, block: jax.Array, valid: jax.Array,
     )(block, valid, src)
 
 
+def bucket_unpack_pallas(packed: jax.Array, block: jax.Array,
+                         valid: jax.Array, out_size: int, *,
+                         tile: int = TILE,
+                         interpret: bool = False) -> jax.Array:
+    """Inverse DMA: gather ``packed``'s tiles back into arena layout.
+
+    ``packed`` is the (concatenated) reduced bucket buffer(s); ``block``
+    maps each destination (arena) tile to its source tile inside
+    ``packed``; ``valid`` zero-fills each tile's tail past the segment end.
+    Same kernel body as the pack direction — only the host-built index
+    tables differ (:func:`build_tile_tables` with src/dst roles swapped).
+    """
+    return bucket_pack_pallas(packed, block, valid, out_size, tile=tile,
+                              interpret=interpret)
+
+
 def bucket_pack_ref(src, block, valid, padded_size: int,
                     tile: int = TILE) -> jax.Array:
     """Pure-jnp oracle."""
@@ -106,17 +139,57 @@ def bucket_pack_ref(src, block, valid, padded_size: int,
     return out
 
 
-def arena_from_leaves(leaves, tile: int = TILE):
+def bucket_unpack_ref(packed, block, valid, out_size: int,
+                      tile: int = TILE) -> jax.Array:
+    """Pure-jnp oracle for the unpack direction (same gather semantics)."""
+    return bucket_pack_ref(packed, block, valid, out_size, tile=tile)
+
+
+def bucket_pack_gather(src: jax.Array, block, valid, padded_size: int,
+                       tile: int = TILE) -> jax.Array:
+    """Vectorized jnp lowering of the pack kernel for non-TPU backends:
+    ONE row-gather of the source's tiles plus a tail mask — numerically
+    identical to :func:`bucket_pack_pallas`, but a 2-op XLA program
+    instead of a Python-stepped interpret-mode grid."""
+    assert padded_size % tile == 0 and src.shape[0] % tile == 0
+    block = jnp.asarray(block, jnp.int32)
+    valid = jnp.asarray(valid, jnp.int32)
+    tiles = src.reshape(-1, tile)[block]                  # (n_tiles, tile)
+    lane = jnp.arange(tile, dtype=jnp.int32)[None, :]
+    tiles = jnp.where(lane < valid[:, None], tiles, 0).astype(src.dtype)
+    return tiles.reshape(padded_size)
+
+
+def bucket_unpack_gather(packed: jax.Array, block, valid, out_size: int,
+                         tile: int = TILE) -> jax.Array:
+    """Vectorized jnp lowering of the unpack direction."""
+    return bucket_pack_gather(packed, block, valid, out_size, tile=tile)
+
+
+def arena_layout(sizes, tile: int = TILE) -> Tuple[np.ndarray, int]:
+    """Host-side arena layout: each leaf (by flat ``sizes``) at the next
+    tile-aligned offset. Returns (offsets: int64[n], total arena size)."""
+    offs = np.zeros((len(sizes),), np.int64)
+    cur = 0
+    for i, sz in enumerate(sizes):
+        offs[i] = cur
+        cur += -(-int(sz) // tile) * tile
+    return offs, max(int(cur), tile)
+
+
+def arena_from_leaves(leaves, tile: int = TILE, dtype=None):
     """Lay leaves into a tile-aligned flat arena; returns (arena, offsets)."""
     offs = []
     parts = []
     cur = 0
     for leaf in leaves:
         flat = jnp.ravel(leaf)
+        if dtype is not None:
+            flat = flat.astype(dtype)
         offs.append(cur)
         pad = (-flat.shape[0]) % tile
         if pad:
             flat = jnp.pad(flat, (0, pad))
         parts.append(flat)
         cur += flat.shape[0]
-    return jnp.concatenate(parts), np.array(offs, np.int32)
+    return jnp.concatenate(parts), np.array(offs, np.int64)

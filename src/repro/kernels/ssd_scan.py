@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, y_ref, st_ref, *, chunk: int):
     f32 = jnp.float32
@@ -84,7 +86,7 @@ def ssd_chunk_pallas(x, dt, cum, B, C, *, interpret: bool = False):
             jax.ShapeDtypeStruct((bh, nc, c, p), jnp.float32),
             jax.ShapeDtypeStruct((bh, nc, n, p), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

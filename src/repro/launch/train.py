@@ -54,6 +54,13 @@ def main() -> None:
                     default="hybrid")
     ap.add_argument("--vci-policy", default="fcfs")
     ap.add_argument("--num-streams", type=int, default=8)
+    ap.add_argument("--pack", choices=("xla", "pallas"), default="xla",
+                    help="bucket pack impl: concat chain vs tile-DMA layout")
+    ap.add_argument("--reduction", choices=("all_reduce", "reduce_scatter"),
+                    default="all_reduce")
+    ap.add_argument("--per-step-plan", action="store_true",
+                    help="rebuild the comm plan every trace (seed behaviour; "
+                         "default uses the persistent CommPlan cache)")
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -72,6 +79,8 @@ def main() -> None:
         cfg, mesh=mesh, lr_fn=lr_fn, comm=args.comm, accum_steps=args.accum,
         num_streams=args.num_streams, progress=args.progress,
         vci_policy=args.vci_policy,
+        pack=args.pack, reduction=args.reduction,
+        persistent_plan=not args.per_step_plan,
         token_impl="data" if jax.default_backend() == "cpu" else "barrier")
     step = jax.jit(step_fn)
 

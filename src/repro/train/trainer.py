@@ -13,6 +13,16 @@ Two gradient-communication modes:
   independent streams by :func:`repro.core.bucketing.reduce_gradients`.
   ``progress`` / ``num_streams`` / ``vci_policy`` / ``token_impl`` expose the
   paper's entire design space (Global vs FG vs per-VCI, Fig. 5-8 ablations).
+
+  Fast-path knobs (this repo's §4.3 per-VCI-request-cache analogue; see the
+  knob matrix in ``repro.core.bucketing``):
+
+  * ``persistent_plan`` — cache the BucketPlan/CommWorld/contexts/pack
+    tables across steps and retraces (True; False = seed per-step rebuild);
+  * ``pack="xla"|"pallas"``   — concat-chain vs arena + fused tile-gather
+    pack/unpack kernels (``repro.kernels.bucket_pack``);
+  * ``reduction="all_reduce"|"reduce_scatter"`` — full all-reduce vs
+    per-bucket reduce_scatter + all_gather (half the wire bytes for DDP).
 """
 
 from __future__ import annotations
@@ -25,11 +35,12 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core import CommRuntime, CommWorld, plan_buckets, reduce_gradients
+from repro.core import get_comm_plan, reduce_gradients
 from repro.dist.sharding import Sharder, batch_axes
 from repro.models.transformer import Model, init_params
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 from repro.train.losses import total_loss
+from repro.compat import shard_map
 
 
 class TrainState(NamedTuple):
@@ -66,6 +77,10 @@ def make_train_step(
     token_impl: str = "barrier",
     staging: str = "per_vci",
     bucket_align: int = 8 * 128,
+    # --- fast-path knobs (persistent plans + fused pack, see bucketing) ---
+    pack: str = "xla",
+    reduction: str = "all_reduce",
+    persistent_plan: bool = True,
     max_grad_norm: Optional[float] = 1.0,
 ) -> Callable[[TrainState, Any], tuple]:
     """Returns ``train_step(state, batch) -> (state, metrics)``.
@@ -139,12 +154,18 @@ def make_train_step(
 
     def inner_step(state: TrainState, batch):
         grads, metrics = grads_and_metrics(state.params, batch)
-        plan = plan_buckets(grads, num_streams, align=bucket_align)
-        world = CommWorld(num_vcis=num_vcis, policy=vci_policy)
-        rt = CommRuntime(world, progress=progress, join_every=join_every,
-                         token_impl=token_impl)
-        grads = reduce_gradients(rt, grads, plan, axis=dp, mean=True,
-                                 staging=staging)
+        # Persistent plan: BucketPlan + CommWorld + contexts + pack tables
+        # are cached on (treedef, shapes, knobs) — rebuilt per call only in
+        # the per-step ablation mode. The CommRuntime (ordering tokens) is
+        # trace-local and minted fresh either way.
+        cp = get_comm_plan(grads, num_streams=num_streams, align=bucket_align,
+                           pack=pack, num_vcis=num_vcis,
+                           vci_policy=vci_policy, progress=progress,
+                           join_every=join_every, token_impl=token_impl,
+                           persistent=persistent_plan)
+        grads = reduce_gradients(cp.runtime(), grads, cp, axis=dp, mean=True,
+                                 staging=staging, pack=pack,
+                                 reduction=reduction)
         metrics = jax.tree_util.tree_map(
             lambda m: jax.lax.pmean(m, dp), metrics)
         return apply_update(state, grads, metrics)
@@ -161,9 +182,9 @@ def make_train_step(
             jax.tree_util.tree_map(lambda _: P(), state),
             {k: P() for k in METRIC_KEYS},
         )
-        f = jax.shard_map(inner_step, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_vma=False,
-                          axis_names=set(dp))
+        f = shard_map(inner_step, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_vma=False,
+                      axis_names=set(dp))
         return f(state, batch)
 
     return train_step

@@ -18,6 +18,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.bucketing import plan_buckets, reduce_gradients
 from repro.core.collectives import CommRuntime
 from repro.core.comm import CommWorld
+from repro.compat import shard_map, set_mesh
 
 
 def _mesh1d(n=None):
@@ -51,8 +52,8 @@ def check_collectives_numerics():
             acc = rt.accumulate(x, w, axis="data")
             return rt.barrier((ar, ag, rs, a2a, sr, acc))
 
-        f = jax.jit(jax.shard_map(run, mesh=mesh, in_specs=P("data"),
-                                  out_specs=P("data"), check_vma=False))
+        f = jax.jit(shard_map(run, mesh=mesh, in_specs=P("data"),
+                              out_specs=P("data"), check_vma=False))
         ar, ag, rs, a2a, sr, acc = f(x)
         np.testing.assert_allclose(ar, jnp.broadcast_to(x.sum(0), (n, 4)))
         np.testing.assert_allclose(ag.reshape(n, n, 4)[0], x)
@@ -77,8 +78,8 @@ def check_accumulate_relaxed_matches_ordered():
             a = rt.accumulate(x, w, axis="data")
             b = rt.accumulate(x * 2, w, axis="data")
             return rt.barrier(a + b)
-        f = jax.jit(jax.shard_map(run, mesh=mesh, in_specs=P("data"),
-                                  out_specs=P("data"), check_vma=False))
+        f = jax.jit(shard_map(run, mesh=mesh, in_specs=P("data"),
+                              out_specs=P("data"), check_vma=False))
         outs[ordering] = np.asarray(f(x))
     np.testing.assert_allclose(outs["rar"], outs["none"])
 
@@ -106,7 +107,7 @@ def check_reduce_gradients_matches_pmean():
                 red = reduce_gradients(rt, tr, plan, axis="data", mean=True,
                                        staging=staging)
                 return rt.barrier(red)
-            f = jax.jit(jax.shard_map(
+            f = jax.jit(shard_map(
                 run, mesh=mesh,
                 in_specs=(jax.tree_util.tree_map(lambda _: P("data"), tree),),
                 out_specs=jax.tree_util.tree_map(lambda _: P(), tree),
@@ -115,6 +116,54 @@ def check_reduce_gradients_matches_pmean():
             for g, e in zip(jax.tree_util.tree_leaves(got),
                             jax.tree_util.tree_leaves(expect)):
                 np.testing.assert_allclose(g, e, rtol=1e-5, atol=1e-6)
+
+
+def check_bucket_fastpath_matches_pmean():
+    """Every fast-path cell (pack x reduction x plan persistence) must equal
+    tree-wise pmean — the numerical acceptance gate for the bucketed fast
+    path (persistent CommPlan, pallas/DMA pack, reduce_scatter+all_gather)."""
+    from repro.core import get_comm_plan, plan_cache_clear, plan_cache_stats
+    from repro.core.bucketing import reduce_gradients as reduce_g
+
+    mesh = _mesh1d()
+    n = mesh.size
+    rng = np.random.default_rng(7)
+    tree = {
+        "a": jnp.asarray(rng.normal(size=(n, 16, 8)), jnp.float32),
+        "b": {"w": jnp.asarray(rng.normal(size=(n, 130)), jnp.float32),
+              "s": jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)},
+        "c": jnp.asarray(rng.normal(size=(n, 257)), jnp.bfloat16),
+    }
+    expect = jax.tree_util.tree_map(
+        lambda t: jnp.asarray(t, jnp.float32).mean(0, keepdims=True)
+        .astype(t.dtype), tree)
+
+    plan_cache_clear()
+    for pack in ("xla", "pallas"):
+        for reduction in ("all_reduce", "reduce_scatter"):
+            for persistent in (True, False):
+                def run(tr):
+                    cp = get_comm_plan(tr, num_streams=3, num_vcis=4,
+                                       pack=pack, persistent=persistent)
+                    rt = cp.runtime()
+                    red = reduce_g(rt, tr, cp, axis="data", mean=True,
+                                   pack=pack, reduction=reduction)
+                    return rt.barrier(red)
+
+                f = jax.jit(shard_map(
+                    run, mesh=mesh,
+                    in_specs=(jax.tree_util.tree_map(lambda _: P("data"),
+                                                     tree),),
+                    out_specs=jax.tree_util.tree_map(lambda _: P(), tree),
+                    check_vma=False))
+                got = f(tree)
+                for g, e in zip(jax.tree_util.tree_leaves(got),
+                                jax.tree_util.tree_leaves(expect)):
+                    np.testing.assert_allclose(
+                        np.asarray(g, np.float32), np.asarray(e, np.float32),
+                        rtol=1e-5, atol=1e-5)
+    # the persistent cells must actually have reused cached plans
+    assert plan_cache_stats()["hits"] >= 2, plan_cache_stats()
 
 
 def check_vci_train_step_matches_gspmd():
@@ -129,7 +178,7 @@ def check_vci_train_step_matches_gspmd():
     batch = synthetic_batch(cfg, 2 * n, 32, seed=1)
     state = train_state_init(cfg, jax.random.PRNGKey(0))
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         ref_step = jax.jit(make_train_step(cfg, mesh=None, comm="gspmd"))
         s_ref, m_ref = ref_step(state, batch)
 
@@ -137,15 +186,18 @@ def check_vci_train_step_matches_gspmd():
         step = make_train_step(cfg, mesh=mesh, comm="vci", num_streams=4,
                                num_vcis=4, progress=progress,
                                token_impl="data")
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             s_vci, m_vci = jax.jit(step)(state, batch)
         np.testing.assert_allclose(
             float(m_vci["loss"]), float(m_ref["loss"]), rtol=1e-5)
+        # bf16 params + different reduction order: one bf16 ULP is
+        # 2^-8 ~= 3.9e-3, so rtol must sit above it (seed's 2e-3 flaked on
+        # elements exactly one ULP apart); 5e-3 = 1.28 ULP headroom.
         for a, b in zip(jax.tree_util.tree_leaves(s_vci.params),
                         jax.tree_util.tree_leaves(s_ref.params)):
             np.testing.assert_allclose(np.asarray(a, np.float32),
                                        np.asarray(b, np.float32),
-                                       rtol=2e-3, atol=5e-6)
+                                       rtol=5e-3, atol=5e-6)
 
 
 def check_scan_vs_unroll_collective_parity():
@@ -174,10 +226,10 @@ def check_scan_vs_unroll_collective_parity():
     x = jnp.zeros((2, d))
     ws = jnp.zeros((L, d, d))
     spec_in = (P(), P())
-    f_s = jax.jit(jax.shard_map(scanned, mesh=mesh, in_specs=spec_in,
-                                out_specs=P(), check_vma=False))
-    f_u = jax.jit(jax.shard_map(unrolled, mesh=mesh, in_specs=spec_in,
-                                out_specs=P(), check_vma=False))
+    f_s = jax.jit(shard_map(scanned, mesh=mesh, in_specs=spec_in,
+                            out_specs=P(), check_vma=False))
+    f_u = jax.jit(shard_map(unrolled, mesh=mesh, in_specs=spec_in,
+                            out_specs=P(), check_vma=False))
     n = mesh.size
     hlo_s = f_s.lower(x, ws).compile().as_text()
     hlo_u = f_u.lower(x, ws).compile().as_text()
@@ -200,8 +252,8 @@ def check_progress_mode_hlo_structure():
             outs = [rt.all_reduce(x + i, c, axis="data")
                     for i, c in enumerate(ctxs)]
             return rt.barrier(sum(outs))
-        return jax.jit(jax.shard_map(run, mesh=mesh, in_specs=P("data"),
-                                     out_specs=P(), check_vma=False))
+        return jax.jit(shard_map(run, mesh=mesh, in_specs=P("data"),
+                                 out_specs=P(), check_vma=False))
 
     x = jnp.ones((mesh.size, 4))
     for progress in ("global", "per_vci", "hybrid"):
@@ -235,7 +287,7 @@ def check_moe_expert_parallel_all_to_all():
     y_ref, aux_ref = moe_ffn(cfg, x, lp, None, inference=True)
 
     shard = Sharder(mesh, cfg)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         f = jax.jit(lambda x, p: moe_ffn(cfg, x, p, shard, inference=True)[0],
                     in_shardings=(NamedSharding(mesh, P("data")), None))
         y_sh = f(x, lp)
@@ -262,7 +314,7 @@ def check_vci_trainer_lowers_production_mesh():
     for progress in ("global", "per_vci", "hybrid"):
         step = make_train_step(cfg, mesh=mesh, comm="vci", num_streams=8,
                                num_vcis=8, progress=progress)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             jax.jit(step).lower(I.train_state_struct(cfg),
                                 batch_spec(cfg, shape, mesh)).compile()
 
@@ -303,7 +355,7 @@ def check_flash_decode_sequence_sharded():
         return combine_partials(outs, ms, ls)
 
     starts = jnp.arange(n, dtype=jnp.int32)[:, None] * (s // n)
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         shard_attn, mesh=mesh,
         in_specs=(P(), P(None, "data"), P(None, "data"), P("data")),
         out_specs=P(), check_vma=False))

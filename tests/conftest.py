@@ -15,21 +15,40 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+# The one multi-device topology every subprocess-based test pins: 8 virtual
+# host devices (the production-ablation mesh size that all EXPERIMENTS.md
+# numbers quote). Benchmarks and _multidev_checks both inherit it through
+# the fixtures below.
+MULTIDEV_DEVICES = 8
 
-def run_multidev(script: str, *args: str, devices: int = 8,
-                 timeout: int = 900) -> subprocess.CompletedProcess:
-    """Run a helper script in a subprocess with N virtual host devices."""
+
+def multidev_env(devices: int = MULTIDEV_DEVICES) -> dict:
+    """Environment pinning XLA_FLAGS to N virtual host devices + PYTHONPATH."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def run_multidev(script: str, *args: str, devices: int = MULTIDEV_DEVICES,
+                 timeout: int = 900) -> subprocess.CompletedProcess:
+    """Run a helper script in a subprocess with N virtual host devices."""
     return subprocess.run(
         [sys.executable, os.path.join(REPO, "tests", script), *args],
-        capture_output=True, text=True, timeout=timeout, env=env)
+        capture_output=True, text=True, timeout=timeout,
+        env=multidev_env(devices))
 
 
 @pytest.fixture(scope="session")
 def multidev():
     return run_multidev
+
+
+@pytest.fixture(scope="session")
+def xla_multidev_env():
+    """The pinned 8-device XLA_FLAGS environment, for subprocess tests that
+    launch their own commands (e.g. benchmark smoke runs)."""
+    return multidev_env()
 
 
 def pytest_configure(config):

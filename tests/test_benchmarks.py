@@ -1,0 +1,65 @@
+"""Benchmark smoke runs under pytest: the perf code must EXECUTE, not just
+import. ``benchmarks.run --smoke`` clamps every timing loop to 2 iterations
+(BENCH_SMOKE=1), so a full benchmark module runs end-to-end in CI time.
+"""
+
+import json
+import subprocess
+import sys
+
+import pytest
+
+from conftest import REPO, multidev_env
+
+
+def _run_bench(tmp_path, *argv, timeout=1200):
+    env = multidev_env()
+    env["BENCH_SMOKE"] = "1"
+    env["BENCH_JSON_DIR"] = str(tmp_path)  # keep committed artifacts intact
+    return subprocess.run(
+        [sys.executable, "-m", *argv], capture_output=True, text=True,
+        cwd=REPO, env=env, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_bucket_path_smoke(tmp_path):
+    """The 3-knob ablation runs and emits a well-formed BENCH json."""
+    r = _run_bench(tmp_path, "benchmarks.bucket_path", "--devices", "8")
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    path = tmp_path / "BENCH_bucket_path.json"
+    assert path.is_file(), r.stdout
+    doc = json.loads(path.read_text())
+    assert len(doc["rows"]) == 8, "2 packs x 2 reductions x 2 plan modes"
+    cells = {(row["pack"], row["reduction"], row["plan"])
+             for row in doc["rows"]}
+    assert ("xla", "all_reduce", "per_step") in cells
+    assert ("pallas", "reduce_scatter", "persistent") in cells
+    s = doc["summary"]
+    assert s["seed_config"] == {"pack": "xla", "reduction": "all_reduce",
+                                "plan": "per_step"}
+    assert s["fast_config"]["plan"] == "persistent"
+    assert s["fast_ms_per_step"] > 0 and s["seed_ms_per_step"] > 0
+
+
+@pytest.mark.slow
+def test_trainer_streams_smoke(tmp_path):
+    """The trainer-level stream sweep executes with the fast-path knobs."""
+    r = _run_bench(tmp_path, "benchmarks.trainer_streams", "--devices", "8",
+                   "--pack", "pallas", "--reduction", "reduce_scatter")
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    assert "trainer_vci_streams" in r.stdout
+    assert "pallas" in r.stdout
+
+
+@pytest.mark.slow
+def test_run_smoke_mode_single_benchmark(tmp_path):
+    """The run.py --smoke driver executes a benchmark subprocess end-to-end."""
+    env = multidev_env()
+    env["BENCH_JSON_DIR"] = str(tmp_path)
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke",
+         "--only", "bucket_path", "--out", str(tmp_path / "bench")],
+        capture_output=True, text=True, cwd=REPO, env=env, timeout=1800)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    assert "[ok] bucket_path" in r.stdout
+    assert (tmp_path / "bench" / "bucket_path.csv").is_file()

@@ -63,6 +63,9 @@ def test_dryrun_cli_single_pair():
 
 
 def test_report_cli():
+    if not os.path.isdir(os.path.join(REPO, "reports", "dryrun_baseline")):
+        pytest.skip("reports/dryrun_baseline artifact not present in checkout "
+                    "(produced by a full launch/dryrun sweep)")
     r = run_cli("repro.launch.report", "--dir", "reports/dryrun_baseline",
                 "--mesh", "16x16")
     assert r.returncode == 0, r.stderr[-2000:]

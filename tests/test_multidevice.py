@@ -26,6 +26,11 @@ def test_reduce_gradients_matches_pmean(multidev):
     _run(multidev, "reduce_gradients_matches_pmean")
 
 
+def test_bucket_fastpath_matches_pmean(multidev):
+    """pack (xla|pallas) x reduction (ar|rs+ag) x plan persistence == pmean."""
+    _run(multidev, "bucket_fastpath_matches_pmean")
+
+
 @pytest.mark.slow
 def test_vci_train_step_matches_gspmd(multidev):
     _run(multidev, "vci_train_step_matches_gspmd")
