@@ -34,8 +34,10 @@ BENCHMARKS = [
     ("benchmarks.bspmm", [], 8, "Fig 27 (BSPMM accumulate)"),
     ("benchmarks.trainer_streams", [], 8,
      "paper claim at the trainer API level (VCI grad streams)"),
+    ("benchmarks.trainer_streams", ["--optimizer", "zero1"], 8,
+     "ZeRO-1 sharded AdamW on the VCI streams (scatter + param gather)"),
     ("benchmarks.bucket_path", [], 8,
-     "fast bucketed-reduction path: plan x pack x reduction ablation"),
+     "fast bucketed-reduction path: plan x pack x reduction(+zero1) ablation"),
 ]
 
 

@@ -15,7 +15,9 @@ from repro.core.bucketing import (
     Bucket,
     BucketPlan,
     CommPlan,
+    ShardLayout,
     TILE,
+    all_gather_shards,
     comm_plan_key,
     get_comm_plan,
     pack_bucket,
@@ -38,7 +40,8 @@ from repro.core.progress import (
 from repro.core.vci import POLICIES, VCI, VCIPool
 
 __all__ = [
-    "Bucket", "BucketPlan", "CommPlan", "TILE", "comm_plan_key",
+    "Bucket", "BucketPlan", "CommPlan", "ShardLayout", "TILE",
+    "all_gather_shards", "comm_plan_key",
     "get_comm_plan", "pack_bucket", "plan_buckets", "plan_cache_clear",
     "plan_cache_stats", "reduce_gradients", "unpack_bucket", "CommRuntime",
     "Request", "CommContext", "CommWorld", "PROGRESS_MODES", "ProgressEngine",

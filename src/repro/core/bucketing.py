@@ -50,6 +50,18 @@ reduction      "all_reduce" |           "reduce_scatter" issues per-bucket
                "reduce_scatter"         psum_scatter + all_gather on the
                                         bucket's VCI stream — same result,
                                         half the bytes on the wire for DDP.
+output         "tree" | "shards"        "tree" (default) returns the reduced
+                                        pytree. "shards" (requires
+                                        ``reduction="reduce_scatter"``) skips
+                                        the re-gather and returns each rank's
+                                        OWN slice of every reduced bucket plus
+                                        the :class:`ShardLayout` describing
+                                        ownership — the ZeRO-1 contract: a
+                                        sharded optimizer consumes the shard
+                                        directly and all-gathers the *updated
+                                        params* instead (see
+                                        ``repro.optim.adamw``), so gradient
+                                        wire bytes are actually halved.
 =============  =======================  =====================================
 
 ``CommRuntime`` (and its ``ProgressEngine`` ordering tokens) is the ONLY
@@ -114,6 +126,90 @@ class BucketPlan:
 
 def _round_up(n: int, align: int) -> int:
     return ((n + align - 1) // align) * align
+
+
+@dataclass(frozen=True)
+class ShardLayout:
+    """Per-rank ownership of every bucket's flat buffer (the ZeRO-1 map).
+
+    ``reduce_scatter`` over ``axis_size`` ranks splits bucket ``b``'s
+    ``padded_size`` buffer into ``axis_size`` equal contiguous shards; rank
+    ``r`` receives (and owns) elements ``[r*S_b, (r+1)*S_b)`` where
+    ``S_b = padded_size / axis_size``. A sharded optimizer keeps moments and
+    the fp32 master copy only for the owned range and all-gathers updated
+    params back into the full buffer.
+
+    Invariants (exercised by the property tests in ``tests/test_properties``):
+
+    * every ``padded_size`` is divisible by ``axis_size`` (enforced at
+      construction), so the ``axis_size`` shard ranges tile each bucket's
+      ``[0, padded_size)`` exactly — no gap, no overlap;
+    * every element of every :class:`LeafSlot` therefore has exactly ONE
+      owning rank (:meth:`owner_of`); a slot that straddles a shard boundary
+      is split between consecutive ranks (:meth:`slot_owners` returns the
+      partition pieces);
+    * pack → scatter → (zero update) → all_gather → unpack is the identity
+      on the original leaves.
+    """
+
+    plan: BucketPlan
+    axis_size: int
+
+    def __post_init__(self):
+        if self.axis_size < 1:
+            raise ValueError(f"axis_size must be >= 1, got {self.axis_size}")
+        for b in self.plan.buckets:
+            if b.padded_size % self.axis_size:
+                raise ValueError(
+                    f"bucket {b.bid} padded_size {b.padded_size} not "
+                    f"divisible by axis_size {self.axis_size}; plan with "
+                    f"align a multiple of the axis size (TILE covers any "
+                    f"2^k mesh up to 1024)")
+
+    @property
+    def num_buckets(self) -> int:
+        return self.plan.num_buckets
+
+    @property
+    def shard_sizes(self) -> Tuple[int, ...]:
+        """Per-bucket local shard length (``padded_size / axis_size``)."""
+        return tuple(b.padded_size // self.axis_size
+                     for b in self.plan.buckets)
+
+    def shard_bounds(self, bid: int) -> Tuple[Tuple[int, int], ...]:
+        """[start, stop) of every rank's shard of bucket ``bid``."""
+        s = self.plan.buckets[bid].padded_size // self.axis_size
+        return tuple((r * s, (r + 1) * s) for r in range(self.axis_size))
+
+    def owner_of(self, bid: int, offset: int) -> int:
+        """The unique rank owning flat ``offset`` of bucket ``bid``."""
+        b = self.plan.buckets[bid]
+        if not 0 <= offset < b.padded_size:
+            raise IndexError(f"offset {offset} outside bucket {bid} "
+                             f"[0, {b.padded_size})")
+        return offset // (b.padded_size // self.axis_size)
+
+    def slot_owners(self, bid: int, slot: LeafSlot
+                    ) -> Tuple[Tuple[int, int, int], ...]:
+        """Partition of a slot's range into (rank, start, stop) pieces.
+
+        Pieces are contiguous, cover ``[slot.offset, slot.offset+size)``
+        exactly, and carry strictly increasing ranks.
+        """
+        s = self.plan.buckets[bid].padded_size // self.axis_size
+        out, cur = [], slot.offset
+        end = slot.offset + slot.size
+        while cur < end:
+            r = cur // s
+            stop = min(end, (r + 1) * s)
+            out.append((r, cur, stop))
+            cur = stop
+        return tuple(out)
+
+    @property
+    def total_shard_elems(self) -> int:
+        """Per-rank optimizer-state footprint in elements (the 1/N claim)."""
+        return sum(self.shard_sizes)
 
 
 def plan_buckets(tree, num_buckets: int, *, align: int = TILE,
@@ -351,6 +447,7 @@ def reduce_gradients(
     contexts=None,
     pack: str = "xla",
     reduction: str = "all_reduce",
+    output: str = "tree",
 ):
     """All-reduce a gradient pytree over ``axis`` on VCI streams.
 
@@ -360,11 +457,24 @@ def reduce_gradients(
     all_reduce vs reduce_scatter+all_gather. The reduce-scatter variant
     falls back to all_reduce for any bucket whose padded size does not
     divide the axis size (never with tile alignment on 2^k-device meshes).
+
+    ``output="shards"`` (requires ``reduction="reduce_scatter"``) stops after
+    the scatter: returns ``(shards, layout)`` where ``shards[b]`` is this
+    rank's float32 slice of reduced bucket ``b`` (mean already applied when
+    ``mean=True``) and ``layout`` is the :class:`ShardLayout`. Every bucket
+    must then divide the axis size — there is no all_reduce fallback, by
+    construction the caller is a sharded optimizer that owns exactly 1/N of
+    each bucket. ``reduce_dtype`` is the WIRE dtype of the scatter (bf16
+    wire + fp32 shards is the mixed-precision ZeRO recipe).
     """
     if pack not in ("xla", "pallas"):
         raise ValueError(f"unknown pack impl {pack!r}")
     if reduction not in ("all_reduce", "reduce_scatter"):
         raise ValueError(f"unknown reduction {reduction!r}")
+    if output not in ("tree", "shards"):
+        raise ValueError(f"unknown output {output!r}")
+    if output == "shards" and reduction != "reduce_scatter":
+        raise ValueError("output='shards' requires reduction='reduce_scatter'")
 
     comm_plan = plan if isinstance(plan, CommPlan) else None
     bplan: BucketPlan = comm_plan.plan if comm_plan is not None else plan
@@ -416,6 +526,14 @@ def reduce_gradients(
     # ---- reduce ------------------------------------------------------------
     n = _axis_size(axis)
 
+    if output == "shards":
+        layout = ShardLayout(bplan, n)  # raises on indivisible buckets
+        shards = []
+        for p, ctx in zip(packed, contexts):
+            shard = rt.reduce_scatter(p, ctx, axis=axis).astype(jnp.float32)
+            shards.append(shard / n if mean else shard)
+        return shards, layout
+
     def reduce_one(p, ctx, padded: int):
         if reduction == "reduce_scatter" and padded % n == 0:
             shard = rt.reduce_scatter(p, ctx, axis=axis)
@@ -461,3 +579,34 @@ def _axis_size(axis) -> int:
             n *= axis_size(a)
         return n
     return axis_size(axis)
+
+
+def all_gather_shards(rt: CommRuntime, shards: Sequence[jax.Array],
+                      plan: Union[BucketPlan, CommPlan], *, axis,
+                      contexts=None, wire_dtype=None):
+    """Rebuild the full pytree from per-rank bucket shards (ZeRO-1 step 3).
+
+    The inverse of ``reduce_gradients(..., output="shards")`` composed with
+    ``unpack``: each bucket's local shard is all-gathered on the SAME
+    CommContext/VCI its reduce_scatter used (when ``plan`` is the CommPlan),
+    re-assembling the ``padded_size`` buffer, which is then unpacked into
+    leaves (cast to each LeafSlot's dtype). ``wire_dtype`` sets the gather
+    payload dtype — param-dtype wire (e.g. bf16) halves the gather bytes
+    and is lossless when every leaf shares that dtype.
+    """
+    comm_plan = plan if isinstance(plan, CommPlan) else None
+    bplan: BucketPlan = comm_plan.plan if comm_plan is not None else plan
+    if contexts is None:
+        if comm_plan is not None:
+            contexts = comm_plan.contexts
+        else:
+            contexts = [rt.world.create(kind="p2p") for _ in bplan.buckets]
+    out_leaves: List[Optional[jax.Array]] = [None] * bplan.num_leaves
+    for shard, ctx, b in zip(shards, contexts, bplan.buckets):
+        if wire_dtype is not None:
+            shard = shard.astype(wire_dtype)
+        flat = rt.all_gather(shard, ctx, axis=axis)
+        for idx, val in unpack_bucket(flat, b):
+            out_leaves[idx] = val
+    assert all(v is not None for v in out_leaves)
+    return jax.tree_util.tree_unflatten(bplan.treedef, out_leaves)

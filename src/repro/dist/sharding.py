@@ -57,6 +57,22 @@ def data_axes(mesh, cfg: Optional[ModelConfig] = None) -> Tuple[str, ...]:
     return batch_axes(mesh)
 
 
+def zero1_opt_specs(mesh, opt_state):
+    """PartitionSpec tree for a ZeRO-1 optimizer state (flat bucket space).
+
+    Every 1-D leaf is a per-bucket flat buffer (m / v / fp32 master) owned
+    1/N across the data axes — spec'd ``P(data...)`` on its only dim so the
+    global array is STORED sharded and each rank's ``shard_map`` view is
+    exactly its :class:`~repro.core.bucketing.ShardLayout` shard. Scalars
+    (the step count) replicate. Works on concrete states and on
+    ``jax.eval_shape`` structs alike.
+    """
+    dp = batch_axes(mesh)
+    dpe = _dp_entry(dp)
+    return jax.tree_util.tree_map(
+        lambda l: P(dpe) if getattr(l, "ndim", 0) == 1 else P(), opt_state)
+
+
 def _axis_size(mesh, ax: AxisLike) -> int:
     if mesh is None or ax is None:
         return 1

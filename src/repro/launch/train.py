@@ -58,6 +58,13 @@ def main() -> None:
                     help="bucket pack impl: concat chain vs tile-DMA layout")
     ap.add_argument("--reduction", choices=("all_reduce", "reduce_scatter"),
                     default="all_reduce")
+    ap.add_argument("--optimizer", choices=("replicated", "zero1"),
+                    default="replicated",
+                    help="zero1 = ZeRO-1 sharded AdamW consuming the "
+                         "reduce_scatter shards directly (vci mode only)")
+    ap.add_argument("--zero1-wire", default=None,
+                    help="wire dtype for zero1 grad-scatter/param-gather "
+                         "(e.g. bfloat16); default f32")
     ap.add_argument("--per-step-plan", action="store_true",
                     help="rebuild the comm plan every trace (seed behaviour; "
                          "default uses the persistent CommPlan cache)")
@@ -81,10 +88,13 @@ def main() -> None:
         vci_policy=args.vci_policy,
         pack=args.pack, reduction=args.reduction,
         persistent_plan=not args.per_step_plan,
+        optimizer=args.optimizer, zero1_wire_dtype=args.zero1_wire,
         token_impl="data" if jax.default_backend() == "cpu" else "barrier")
     step = jax.jit(step_fn)
 
-    state = train_state_init(cfg, jax.random.PRNGKey(args.seed))
+    state = train_state_init(
+        cfg, jax.random.PRNGKey(args.seed), optimizer=args.optimizer,
+        mesh=mesh, num_streams=args.num_streams, pack=args.pack)
     start = 0
     if args.ckpt_dir and (ls := latest_step(args.ckpt_dir)) is not None:
         state = load_checkpoint(args.ckpt_dir, ls, state)

@@ -1,5 +1,8 @@
-from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.adamw import (AdamWState, ShardedAdamWState, adamw_init,
+                               adamw_update, bucket_decay_masks,
+                               sharded_adamw_init, sharded_adamw_update)
 from repro.optim.schedule import cosine_schedule, linear_warmup
 
-__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
-           "linear_warmup"]
+__all__ = ["AdamWState", "ShardedAdamWState", "adamw_init", "adamw_update",
+           "bucket_decay_masks", "sharded_adamw_init", "sharded_adamw_update",
+           "cosine_schedule", "linear_warmup"]

@@ -4,14 +4,35 @@ Moments are stored in ``cfg.optimizer_dtype`` (arctic-480b uses bfloat16
 moments to fit the single-pod memory budget; everything else uses float32).
 Moment tensors inherit their parameter's sharding, so optimizer state scales
 with FSDP/TP exactly like the parameters do.
+
+Two optimizer layouts:
+
+* :func:`adamw_init` / :func:`adamw_update` — the replicated (DDP) layout:
+  every rank holds full m/v trees and applies the full update.
+* :func:`sharded_adamw_init` / :func:`sharded_adamw_update` — the ZeRO-1
+  layout. State lives in FLAT BUCKET SPACE (the ``BucketPlan`` packing used
+  by ``reduce_gradients``): per bucket one fp32 master-param buffer plus
+  m/v moment buffers, all sharded 1/N over the data axis via a
+  :class:`~repro.core.bucketing.ShardLayout`. Each rank consumes its
+  reduce_scatter gradient shard directly, updates only the owned range, and
+  the trainer all-gathers the *updated params* once per bucket — halving
+  gradient wire bytes (reduce_scatter instead of all_reduce) and cutting
+  optimizer memory 1/N. Per-leaf semantics that don't survive flattening
+  (decoupled weight decay on ``ndim >= 2`` leaves only) are carried by a
+  precomputed per-element mask (:func:`bucket_decay_masks`); global-norm
+  clipping psums the per-shard partial sum-of-squares across ranks before
+  scaling, reproducing the replicated clip exactly.
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bucketing import BucketPlan, ShardLayout, pack_bucket
 
 
 class AdamWState(NamedTuple):
@@ -82,3 +103,123 @@ def adamw_update(
     new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
     new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
     return new_p, AdamWState(new_m, new_v, count), {"grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: sharded AdamW in flat bucket space
+# ---------------------------------------------------------------------------
+
+class ShardedAdamWState(NamedTuple):
+    """ZeRO-1 optimizer state in flat bucket space.
+
+    ``m`` / ``v`` / ``master`` are per-bucket 1-D buffers; ``master`` is the
+    fp32 master copy of the packed parameters (source of truth for the
+    update — the working param tree is just its gathered, leaf-dtype view).
+    Globally each buffer has the bucket's ``padded_size``; inside the
+    ``shard_map`` step every rank sees only its own ``padded_size/N`` shard
+    (the trainer's in/out specs put these on the data axis), so optimizer
+    memory scales 1/N.
+    """
+
+    m: Tuple[jax.Array, ...]
+    v: Tuple[jax.Array, ...]
+    master: Tuple[jax.Array, ...]
+    count: jax.Array
+
+
+def bucket_decay_masks(plan: BucketPlan) -> Tuple[np.ndarray, ...]:
+    """Per-bucket f32 masks carrying the per-leaf weight-decay rule into
+    flat space: 1.0 on elements of ``ndim >= 2`` leaves (matrices get
+    decoupled decay, exactly like :func:`adamw_update`), 0.0 on vector/
+    scalar leaves and on alignment padding (padding therefore never decays
+    and stays identically zero)."""
+    masks = []
+    for b in plan.buckets:
+        mask = np.zeros((b.padded_size,), np.float32)
+        for s in b.slots:
+            if len(s.shape) >= 2:
+                mask[s.offset:s.offset + s.size] = 1.0
+        masks.append(mask)
+    return tuple(masks)
+
+
+def sharded_adamw_init(params, plan: BucketPlan,
+                       moment_dtype=jnp.float32) -> ShardedAdamWState:
+    """Build the GLOBAL ZeRO-1 state: fp32 master = the packed params, zero
+    moments. Runs outside ``shard_map``; the trainer's ``P(data)`` specs
+    store each buffer sharded over the data axis, so no rank ever
+    materializes more than 1/N of it after placement."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    if treedef != plan.treedef:
+        raise ValueError("params tree does not match the bucket plan's tree")
+    master = tuple(pack_bucket(leaves, b, dtype=jnp.float32)
+                   for b in plan.buckets)
+    zeros = tuple(jnp.zeros((b.padded_size,), moment_dtype)
+                  for b in plan.buckets)
+    return ShardedAdamWState(m=zeros, v=zeros, master=master,
+                             count=jnp.zeros((), jnp.int32))
+
+
+def sharded_adamw_update(
+    grad_shards: Sequence[jax.Array],
+    state: ShardedAdamWState,
+    *,
+    lr: jax.Array,
+    layout: ShardLayout,
+    decay_masks: Sequence[jax.Array],
+    psum: Optional[Callable[[jax.Array], jax.Array]] = None,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: Optional[float] = 1.0,
+) -> Tuple[Tuple[jax.Array, ...], ShardedAdamWState, dict]:
+    """Apply AdamW to the LOCAL shard of every bucket.
+
+    Runs inside ``shard_map``: ``grad_shards[b]`` is this rank's f32
+    reduce_scatter output for bucket ``b`` (mean-reduced), ``state`` holds
+    the rank's m/v/master shards, ``decay_masks[b]`` is this rank's
+    SHARD-SIZED slice of :func:`bucket_decay_masks` output (hand the full
+    masks to ``shard_map`` under a ``P(data)`` spec so every rank stores
+    only its 1/N window, like the state buffers), and ``psum`` sums a
+    scalar across ranks (the cross-shard half of global-norm clipping).
+    Returns the updated fp32 param shards (for the trainer's per-bucket
+    all_gather), the new state, and ``{"grad_norm": ...}``.
+    """
+    if psum is None:
+        psum = lambda x: x
+    shard_sizes = layout.shard_sizes
+    grads = [g.astype(jnp.float32) for g in grad_shards]
+    for bid, (g, wd) in enumerate(zip(grads, decay_masks)):
+        expect = (shard_sizes[bid],)
+        if g.shape != expect or tuple(wd.shape) != expect:
+            raise ValueError(
+                f"bucket {bid}: grad shard {g.shape} / decay mask "
+                f"{tuple(wd.shape)} do not match the layout shard {expect}")
+
+    # global-norm clip: partial sumsq over the owned shards, psum'd. Shards
+    # tile the buckets exactly (ShardLayout invariant) and padding is zero,
+    # so this equals the replicated tree-wise norm up to summation order.
+    sumsq = sum(jnp.sum(jnp.square(g)) for g in grads)
+    gnorm = jnp.sqrt(psum(sumsq))
+    if max_grad_norm is not None:
+        scale = jnp.minimum(1.0, max_grad_norm / jnp.maximum(gnorm, 1e-9))
+        grads = [g * scale for g in grads]
+
+    count = state.count + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    new_m, new_v, new_master = [], [], []
+    for bid, g in enumerate(grads):
+        m, v, p = state.m[bid], state.v[bid], state.master[bid]
+        wd = decay_masks[bid].astype(jnp.float32)
+        mf = m.astype(jnp.float32) * b1 + g * (1 - b1)
+        vf = v.astype(jnp.float32) * b2 + jnp.square(g) * (1 - b2)
+        step = (mf / c1) / (jnp.sqrt(vf / c2) + eps) + weight_decay * wd * p
+        new_master.append(p - lr * step)
+        new_m.append(mf.astype(m.dtype))
+        new_v.append(vf.astype(v.dtype))
+    new_state = ShardedAdamWState(tuple(new_m), tuple(new_v),
+                                  tuple(new_master), count)
+    return tuple(new_master), new_state, {"grad_norm": gnorm}

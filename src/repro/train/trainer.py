@@ -35,23 +35,60 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core import get_comm_plan, reduce_gradients
-from repro.dist.sharding import Sharder, batch_axes
+from repro.core import TILE, get_comm_plan, reduce_gradients
+from repro.core.bucketing import ShardLayout, all_gather_shards, plan_buckets
+from repro.dist.sharding import Sharder, batch_axes, zero1_opt_specs
 from repro.models.transformer import Model, init_params
-from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.adamw import (AdamWState, ShardedAdamWState, adamw_init,
+                               adamw_update, bucket_decay_masks,
+                               sharded_adamw_init, sharded_adamw_update)
 from repro.train.losses import total_loss
 from repro.compat import shard_map
 
 
 class TrainState(NamedTuple):
     params: Any
-    opt: AdamWState
+    opt: Any                     # AdamWState | ShardedAdamWState (zero1)
     step: jax.Array
 
 
-def train_state_init(cfg: ModelConfig, key: jax.Array) -> TrainState:
+def _zero1_plan(params_or_grads, *, num_streams: int, align: int, pack: str):
+    """The bucket plan the zero1 path uses — MUST match what the step's
+    ``get_comm_plan`` builds, so state init and update agree on layout."""
+    slot_align = align if pack == "pallas" else None
+    return plan_buckets(params_or_grads, num_streams, align=align,
+                        slot_align=slot_align)
+
+
+def train_state_init(cfg: ModelConfig, key: jax.Array, *,
+                     optimizer: str = "replicated",
+                     mesh=None, num_streams: int = 8,
+                     bucket_align: int = TILE,
+                     pack: str = "xla") -> TrainState:
+    """Fresh params + optimizer state.
+
+    ``optimizer="zero1"`` builds the ZeRO-1 flat-bucket state
+    (:func:`sharded_adamw_init`): pass the SAME ``mesh`` / ``num_streams`` /
+    ``bucket_align`` / ``pack`` the matching ``make_train_step`` gets, since
+    the bucket plan (and therefore every buffer's layout) derives from them.
+    """
     params = init_params(cfg, key)
-    opt = adamw_init(params, moment_dtype=jnp.dtype(cfg.optimizer_dtype))
+    if optimizer == "replicated":
+        opt = adamw_init(params, moment_dtype=jnp.dtype(cfg.optimizer_dtype))
+    elif optimizer == "zero1":
+        if mesh is None:
+            raise ValueError("optimizer='zero1' needs a mesh (the data axes "
+                             "define the shard layout)")
+        plan = _zero1_plan(params, num_streams=num_streams,
+                           align=bucket_align, pack=pack)
+        n = 1
+        for a in batch_axes(mesh):
+            n *= dict(mesh.shape)[a]
+        ShardLayout(plan, n)  # validate divisibility up front
+        opt = sharded_adamw_init(params, plan,
+                                 moment_dtype=jnp.dtype(cfg.optimizer_dtype))
+    else:
+        raise ValueError(f"unknown optimizer {optimizer!r}")
     return TrainState(params, opt, jnp.zeros((), jnp.int32))
 
 
@@ -82,12 +119,37 @@ def make_train_step(
     reduction: str = "all_reduce",
     persistent_plan: bool = True,
     max_grad_norm: Optional[float] = 1.0,
+    # --- optimizer layout (ZeRO-1) ---
+    optimizer: str = "replicated",
+    zero1_wire_dtype: Optional[str] = None,
 ) -> Callable[[TrainState, Any], tuple]:
     """Returns ``train_step(state, batch) -> (state, metrics)``.
 
     The returned function is NOT jitted; callers jit with the appropriate
     in/out shardings (launch/train.py) or call it inside tests directly.
+
+    ``optimizer`` selects the optimizer layout (vci mode only):
+
+    * ``"replicated"`` — every rank reduces the full gradient tree and
+      applies the full AdamW update (DDP).
+    * ``"zero1"`` — ZeRO-1: per-bucket ``reduce_scatter`` hands each rank
+      only its :class:`ShardLayout` shard, :func:`sharded_adamw_update`
+      updates m/v and the fp32 master copy for that shard alone, and the
+      *updated params* are all-gathered once per bucket on the SAME
+      CommContext/VCI the reduce used. Gradient wire bytes are halved
+      (scatter only, no gradient gather) and optimizer memory drops 1/N.
+      State must come from ``train_state_init(optimizer="zero1")`` with
+      matching mesh/num_streams/bucket_align/pack. ``zero1_wire_dtype``
+      (e.g. ``"bfloat16"``) sets the payload dtype of BOTH the gradient
+      scatter and the param gather — the mixed-precision deployment recipe
+      (fp32 master shards absorb the wire rounding); ``None`` keeps f32
+      wire, which matches the replicated path to fp32 tolerance.
     """
+    if optimizer not in ("replicated", "zero1"):
+        raise ValueError(f"unknown optimizer {optimizer!r}")
+    if optimizer == "zero1" and comm != "vci":
+        raise ValueError("optimizer='zero1' requires comm='vci' (the "
+                         "bucketed reduce_scatter path)")
     if lr_fn is None:
         lr_fn = lambda step: 3e-4
     shard = Sharder(mesh, cfg) if (mesh is not None and comm == "gspmd") else (
@@ -151,18 +213,22 @@ def make_train_step(
     # ---------------- vci mode -------------------------------------------
     assert mesh is not None, "vci mode needs a mesh"
     dp = batch_axes(mesh)
+    wire = jnp.dtype(zero1_wire_dtype) if zero1_wire_dtype else jnp.float32
 
-    def inner_step(state: TrainState, batch):
-        grads, metrics = grads_and_metrics(state.params, batch)
+    def _comm_plan(grads):
         # Persistent plan: BucketPlan + CommWorld + contexts + pack tables
         # are cached on (treedef, shapes, knobs) — rebuilt per call only in
         # the per-step ablation mode. The CommRuntime (ordering tokens) is
         # trace-local and minted fresh either way.
-        cp = get_comm_plan(grads, num_streams=num_streams, align=bucket_align,
-                           pack=pack, num_vcis=num_vcis,
-                           vci_policy=vci_policy, progress=progress,
-                           join_every=join_every, token_impl=token_impl,
-                           persistent=persistent_plan)
+        return get_comm_plan(grads, num_streams=num_streams,
+                             align=bucket_align, pack=pack, num_vcis=num_vcis,
+                             vci_policy=vci_policy, progress=progress,
+                             join_every=join_every, token_impl=token_impl,
+                             persistent=persistent_plan)
+
+    def inner_step(state: TrainState, batch):
+        grads, metrics = grads_and_metrics(state.params, batch)
+        cp = _comm_plan(grads)
         grads = reduce_gradients(cp.runtime(), grads, cp, axis=dp, mean=True,
                                  staging=staging, pack=pack,
                                  reduction=reduction)
@@ -170,21 +236,62 @@ def make_train_step(
             lambda m: jax.lax.pmean(m, dp), metrics)
         return apply_update(state, grads, metrics)
 
+    def inner_step_zero1(state: TrainState, batch, mask_shards):
+        grads, metrics = grads_and_metrics(state.params, batch)
+        cp = _comm_plan(grads)
+        rt = cp.runtime()
+        # 1) scatter: each rank receives (and owns) 1/N of every bucket.
+        shards, layout = reduce_gradients(
+            rt, grads, cp, axis=dp, mean=True, staging=staging, pack=pack,
+            reduction="reduce_scatter", output="shards", reduce_dtype=wire)
+        metrics = jax.tree_util.tree_map(
+            lambda m: jax.lax.pmean(m, dp), metrics)
+        # 2) local AdamW on the owned shards (norm partials psum'd on the
+        # first bucket's context). mask_shards arrived pre-sliced to this
+        # rank's window by the P(data) in_spec.
+        lr = lr_fn(state.step)
+        new_shards, new_opt, om = sharded_adamw_update(
+            shards, state.opt, lr=jnp.asarray(lr, jnp.float32),
+            layout=layout, decay_masks=mask_shards,
+            psum=lambda s: rt.all_reduce(s, cp.contexts[0], axis=dp),
+            max_grad_norm=max_grad_norm)
+        # 3) gather the UPDATED PARAMS per bucket on the reduce's VCI.
+        new_params = all_gather_shards(rt, new_shards, cp, axis=dp,
+                                       wire_dtype=wire)
+        metrics = dict(metrics) | om | {"lr": jnp.asarray(lr, jnp.float32)}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
     METRIC_KEYS = ("ce", "tokens", "load_balance", "router_z", "loss",
                    "grad_norm", "lr")
 
     def train_step(state: TrainState, batch):
-        in_specs = (
-            jax.tree_util.tree_map(lambda _: P(), state),
-            jax.tree_util.tree_map(lambda _: P(dp), batch),
-        )
-        out_specs = (
-            jax.tree_util.tree_map(lambda _: P(), state),
-            {k: P() for k in METRIC_KEYS},
-        )
-        f = shard_map(inner_step, mesh=mesh, in_specs=in_specs,
-                      out_specs=out_specs, check_vma=False,
-                      axis_names=set(dp))
+        batch_spec = jax.tree_util.tree_map(lambda _: P(dp), batch)
+        metric_specs = {k: P() for k in METRIC_KEYS}
+        if optimizer == "zero1":
+            # flat m/v/master buffers live SHARDED on the data axes; params
+            # and the step count replicate (dist.sharding.zero1_opt_specs).
+            state_spec = TrainState(
+                params=jax.tree_util.tree_map(lambda _: P(), state.params),
+                opt=zero1_opt_specs(mesh, state.opt),
+                step=P())
+            # decay masks ride in P(data)-spec'd like the opt buffers, so
+            # each rank stores only its shard of the full-bucket masks
+            # (grads share the params' shapes, hence the same plan).
+            plan = _zero1_plan(state.params, num_streams=num_streams,
+                               align=bucket_align, pack=pack)
+            masks = tuple(jnp.asarray(m) for m in bucket_decay_masks(plan))
+            dpe = dp[0] if len(dp) == 1 else dp
+            f = shard_map(inner_step_zero1, mesh=mesh,
+                          in_specs=(state_spec, batch_spec,
+                                    tuple(P(dpe) for _ in masks)),
+                          out_specs=(state_spec, metric_specs),
+                          check_vma=False, axis_names=set(dp))
+            return f(state, batch, masks)
+        state_spec = jax.tree_util.tree_map(lambda _: P(), state)
+        f = shard_map(inner_step, mesh=mesh,
+                      in_specs=(state_spec, batch_spec),
+                      out_specs=(state_spec, metric_specs),
+                      check_vma=False, axis_names=set(dp))
         return f(state, batch)
 
     return train_step

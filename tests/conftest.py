@@ -53,3 +53,9 @@ def xla_multidev_env():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    config.addinivalue_line(
+        "markers",
+        "multidev: runs a subprocess check on the 8-virtual-device CPU mesh "
+        "(tests/_multidev_checks.py via the multidev fixture); part of the "
+        "default tier-1 run — select with -m multidev, skip with "
+        "-m 'not multidev'")

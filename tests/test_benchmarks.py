@@ -23,22 +23,31 @@ def _run_bench(tmp_path, *argv, timeout=1200):
 
 @pytest.mark.slow
 def test_bucket_path_smoke(tmp_path):
-    """The 3-knob ablation runs and emits a well-formed BENCH json."""
+    """The 3-knob ablation (now incl. the zero1 cells) runs and emits a
+    well-formed BENCH json whose wire-byte summary shows the ZeRO-1 claim:
+    grad reduce_scatter + param all_gather move ≲ 0.55x the bytes of the
+    f32 gradient all_reduce (bf16 wire, fp32 master shards)."""
     r = _run_bench(tmp_path, "benchmarks.bucket_path", "--devices", "8")
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
     path = tmp_path / "BENCH_bucket_path.json"
     assert path.is_file(), r.stdout
     doc = json.loads(path.read_text())
-    assert len(doc["rows"]) == 8, "2 packs x 2 reductions x 2 plan modes"
+    assert len(doc["rows"]) == 12, "2 packs x 3 reductions x 2 plan modes"
     cells = {(row["pack"], row["reduction"], row["plan"])
              for row in doc["rows"]}
     assert ("xla", "all_reduce", "per_step") in cells
     assert ("pallas", "reduce_scatter", "persistent") in cells
+    assert ("pallas", "zero1", "persistent") in cells
     s = doc["summary"]
     assert s["seed_config"] == {"pack": "xla", "reduction": "all_reduce",
                                 "plan": "per_step"}
     assert s["fast_config"]["plan"] == "persistent"
     assert s["fast_ms_per_step"] > 0 and s["seed_ms_per_step"] > 0
+    # the acceptance gate: zero1 per-step gradient wire bytes (param
+    # all_gather counted) at num_streams=8
+    assert s["zero1_wire_ratio"] <= 0.55, s
+    for row in doc["rows"]:
+        assert row["wire_link_bytes"] > 0, row
 
 
 @pytest.mark.slow
@@ -49,6 +58,17 @@ def test_trainer_streams_smoke(tmp_path):
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
     assert "trainer_vci_streams" in r.stdout
     assert "pallas" in r.stdout
+
+
+@pytest.mark.slow
+def test_trainer_streams_zero1_smoke(tmp_path):
+    """The trainer-level sweep executes end-to-end with the ZeRO-1 sharded
+    optimizer (scatter -> sharded AdamW -> param gather on VCI streams)."""
+    r = _run_bench(tmp_path, "benchmarks.trainer_streams", "--devices", "8",
+                   "--optimizer", "zero1", "--zero1-wire", "bfloat16")
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    assert "trainer_vci_streams" in r.stdout
+    assert "zero1" in r.stdout
 
 
 @pytest.mark.slow

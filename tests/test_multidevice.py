@@ -7,6 +7,8 @@ process keeps the single real device (per the dry-run isolation rule).
 
 import pytest
 
+pytestmark = pytest.mark.multidev
+
 
 def _run(multidev, name, devices=8):
     r = multidev("_multidev_checks.py", name, devices=devices)

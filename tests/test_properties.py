@@ -30,6 +30,8 @@ except ImportError:  # pragma: no cover - optional dep absent in minimal envs
     def given(*a, **k):
         return pytest.mark.skip(reason="hypothesis not installed")
 
+from repro.core.bucketing import ShardLayout, pack_bucket, plan_buckets, \
+    unpack_bucket
 from repro.core.vci import VCIPool
 from repro.models.layers import apply_rope, layer_norm, rms_norm
 from repro.models.attention import causal_mask
@@ -136,6 +138,144 @@ def test_causal_mask_properties(q, kv, w, off):
             if w is not None:
                 expect = expect and j > i + off - w
             assert m[i, j] == expect
+
+
+# ---------------------------------------------------------------------------
+# ShardLayout (ZeRO-1 ownership map) invariants
+# ---------------------------------------------------------------------------
+
+def _random_shapes(rng, max_leaves=10):
+    n_leaves = int(rng.integers(1, max_leaves + 1))
+    shapes = []
+    for _ in range(n_leaves):
+        nd = int(rng.integers(0, 4))
+        shapes.append(tuple(int(rng.integers(1, 20)) for _ in range(nd)))
+    return shapes
+
+
+def _check_layout_invariants(shapes, num_streams, axis_size, align):
+    """The three ShardLayout invariants for one (tree, knobs) draw:
+    shard bounds tile each padded bucket exactly, every LeafSlot element
+    has exactly one owner, and slot_owners returns a clean partition."""
+    tree = {f"l{i}": jax.ShapeDtypeStruct(s, jnp.float32)
+            for i, s in enumerate(shapes)}
+    plan = plan_buckets(tree, num_streams, align=align)
+    layout = ShardLayout(plan, axis_size)
+    assert layout.total_shard_elems * axis_size == plan.total_padded
+    for bid, b in enumerate(plan.buckets):
+        bounds = layout.shard_bounds(bid)
+        # tiling: starts at 0, contiguous, ends at padded_size, equal sizes
+        assert bounds[0][0] == 0 and bounds[-1][1] == b.padded_size
+        assert all(bounds[r][1] == bounds[r + 1][0]
+                   for r in range(len(bounds) - 1))
+        assert len({hi - lo for lo, hi in bounds}) == 1
+        for s in b.slots:
+            pieces = layout.slot_owners(bid, s)
+            # pieces partition [offset, offset+size) with increasing ranks
+            assert pieces[0][1] == s.offset
+            assert pieces[-1][2] == s.offset + s.size
+            assert all(p[2] == q[1] for p, q in zip(pieces, pieces[1:]))
+            assert [p[0] for p in pieces] == sorted({p[0] for p in pieces})
+            # ...and owner_of agrees element-wise: exactly one owner each
+            for rank, lo, hi in pieces:
+                for off in (lo, hi - 1):
+                    assert layout.owner_of(bid, off) == rank
+    return plan, layout
+
+
+def test_shard_layout_invariants_examples():
+    """Deterministic sweep of the ShardLayout invariants (runs with or
+    without hypothesis)."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        axis_size = int(2 ** rng.integers(0, 4))
+        align = axis_size * int(rng.integers(1, 9))
+        _check_layout_invariants(_random_shapes(rng),
+                                 int(rng.integers(1, 7)), axis_size, align)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), num_streams=st.integers(1, 8),
+       axis_pow=st.integers(0, 3), align_mult=st.integers(1, 16))
+def test_shard_layout_invariants(seed, num_streams, axis_pow, align_mult):
+    rng = np.random.default_rng(seed)
+    axis_size = 2 ** axis_pow
+    _check_layout_invariants(_random_shapes(rng), num_streams, axis_size,
+                             axis_size * align_mult)
+
+
+def _check_zero1_roundtrip(shapes, num_streams, axis_size, align, seed):
+    """pack -> scatter -> zero local update -> all_gather -> unpack == id.
+
+    The scatter/gather are simulated by slicing/concatenating the flat
+    buffer (what psum_scatter/all_gather do to a replicated operand), so the
+    identity isolates the LAYOUT math: any offset/shard-boundary bug
+    scrambles leaves.
+    """
+    from repro.optim.adamw import bucket_decay_masks, sharded_adamw_init, \
+        sharded_adamw_update
+
+    from repro.optim.adamw import ShardedAdamWState
+
+    rng = np.random.default_rng(seed)
+    tree = {f"l{i}": jnp.asarray(rng.normal(size=s), jnp.float32)
+            for i, s in enumerate(shapes)}
+    plan = plan_buckets(tree, num_streams, align=align)
+    layout = ShardLayout(plan, axis_size)
+    masks = bucket_decay_masks(plan)
+    state = sharded_adamw_init(tree, plan)
+    leaves = jax.tree_util.tree_leaves(tree)
+    packed = [pack_bucket(leaves, b) for b in plan.buckets]
+
+    # every rank runs the real sharded update (lr=0 => zero update) on its
+    # simulated scatter output; per-bucket gather = concat over ranks
+    per_rank = []
+    for rank in range(axis_size):
+        bounds = [layout.shard_bounds(bid)[rank]
+                  for bid in range(plan.num_buckets)]
+        local = ShardedAdamWState(
+            m=tuple(state.m[b][lo:hi] for b, (lo, hi) in enumerate(bounds)),
+            v=tuple(state.v[b][lo:hi] for b, (lo, hi) in enumerate(bounds)),
+            master=tuple(state.master[b][lo:hi]
+                         for b, (lo, hi) in enumerate(bounds)),
+            count=state.count)
+        shards, _, _ = sharded_adamw_update(
+            [p[lo:hi] for p, (lo, hi) in zip(packed, bounds)], local,
+            lr=jnp.float32(0.0), layout=layout,
+            decay_masks=[m[lo:hi] for m, (lo, hi) in zip(masks, bounds)],
+            max_grad_norm=1.0)
+        assert all(s.shape == (layout.shard_sizes[b],)
+                   for b, s in enumerate(shards))
+        per_rank.append(shards)
+    gathered = [jnp.concatenate([per_rank[r][bid] for r in range(axis_size)])
+                for bid in range(plan.num_buckets)]
+
+    got = [None] * len(leaves)
+    for flat, b in zip(gathered, plan.buckets):
+        for idx, val in unpack_bucket(flat, b):
+            got[idx] = val
+    for g, e in zip(got, leaves):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
+
+
+def test_zero1_roundtrip_identity_examples():
+    for seed in range(6):
+        rng = np.random.default_rng(100 + seed)
+        axis_size = int(2 ** rng.integers(0, 4))
+        align = axis_size * int(rng.integers(1, 9))
+        _check_zero1_roundtrip(_random_shapes(rng, max_leaves=6),
+                               int(rng.integers(1, 5)), axis_size, align,
+                               seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), num_streams=st.integers(1, 5),
+       axis_pow=st.integers(0, 3), align_mult=st.integers(1, 8))
+def test_zero1_roundtrip_identity(seed, num_streams, axis_pow, align_mult):
+    axis_size = 2 ** axis_pow
+    rng = np.random.default_rng(seed)
+    _check_zero1_roundtrip(_random_shapes(rng, max_leaves=6), num_streams,
+                           axis_size, axis_size * align_mult, seed)
 
 
 # ---------------------------------------------------------------------------
