@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 POLICIES = ("fcfs", "round_robin", "hash", "hinted")
 
@@ -55,6 +55,17 @@ class VCI:
 
 @dataclass
 class VCIStats:
+    """Pool accounting.
+
+    ``fallback_hits`` counts only *genuine* fallback events — pool
+    exhaustion or an explicit ``hint="shared"`` — not every assignment that
+    happens to land on VCI 0 (a ``hash`` policy mapping a context to index 0
+    is a normal assignment, not a degradation). ``per_vci_contexts`` tracks
+    LIVE contexts: releases decrement it, so ``max_contexts_per_vci``
+    reflects the current worst-case sharing, which is what the
+    mapping-mismatch benchmark correlates with serialization.
+    """
+
     acquires: int = 0
     fallback_hits: int = 0
     releases: int = 0
@@ -64,6 +75,14 @@ class VCIStats:
         self.acquires += 1
         self.fallback_hits += int(fallback)
         self.per_vci_contexts[idx] = self.per_vci_contexts.get(idx, 0) + 1
+
+    def record_release(self, idx: int) -> None:
+        self.releases += 1
+        live = self.per_vci_contexts.get(idx, 0) - 1
+        if live > 0:
+            self.per_vci_contexts[idx] = live
+        else:
+            self.per_vci_contexts.pop(idx, None)
 
     @property
     def max_contexts_per_vci(self) -> int:
@@ -98,14 +117,14 @@ class VCIPool:
         """
         if ctx_name in self._assignment:
             raise KeyError(f"context {ctx_name!r} already holds a VCI")
-        idx = self._select(ctx_name, hint)
+        idx, fallback = self._select(ctx_name, hint)
         self._assignment[ctx_name] = idx
-        self.stats.record(idx, fallback=(idx == self.FALLBACK))
+        self.stats.record(idx, fallback=fallback)
         return VCI(idx)
 
     def release(self, ctx_name: str) -> None:
         idx = self._assignment.pop(ctx_name)
-        self.stats.releases += 1
+        self.stats.record_release(idx)
         if idx != self.FALLBACK and self.policy in ("fcfs", "hinted"):
             self._free.append(idx)
 
@@ -118,27 +137,41 @@ class VCIPool:
         return len(self._assignment)
 
     # ------------------------------------------------------------------
-    def _select(self, ctx_name: str, hint: Optional[str]) -> int:
+    def _select(self, ctx_name: str, hint: Optional[str]) -> Tuple[int, bool]:
+        """Returns ``(index, fallback)``.
+
+        ``fallback`` is True only on a genuine fallback event: explicit
+        ``hint="shared"`` or pool exhaustion. A ``hash`` assignment that
+        happens to land on index 0 — or a ``hinted``-policy context that
+        never asked for a dedicated interface — is a normal assignment and
+        must not inflate ``fallback_hits`` (that miscount skewed the
+        mapping-mismatch benchmark's exhaustion curve).
+        """
         if hint == "shared":
-            return self.FALLBACK
+            return self.FALLBACK, True
+        if self.num_vcis == 1:
+            # only the fallback exists: every assignment shares COMM_WORLD's
+            # stream — a genuine (permanent) exhaustion, for EVERY policy
+            return self.FALLBACK, True
         if self.policy == "fcfs":
-            return self._free.pop() if self._free else self.FALLBACK
+            if self._free:
+                return self._free.pop(), False
+            return self.FALLBACK, True
         if self.policy == "round_robin":
-            if self.num_vcis == 1:
-                return self.FALLBACK
             idx = self._rr_next
             self._rr_next += 1
             if self._rr_next >= self.num_vcis:
                 self._rr_next = 1
-            return idx
+            return idx, False
         if self.policy == "hash":
             h = int.from_bytes(
                 hashlib.blake2s(ctx_name.encode()).digest()[:4], "little")
-            return h % self.num_vcis
+            return h % self.num_vcis, False
         if self.policy == "hinted":
             if hint == "dedicated" and self._free:
-                return self._free.pop()
+                return self._free.pop(), False
             if hint == "dedicated":
-                return self.FALLBACK  # exhausted, same as fcfs
-            return self.FALLBACK      # unhinted contexts share the fallback
+                return self.FALLBACK, True  # exhausted, same as fcfs
+            # unhinted contexts share the fallback by design, not exhaustion
+            return self.FALLBACK, False
         raise AssertionError(self.policy)

@@ -49,8 +49,15 @@ def causal_mask(q_len: int, kv_len: int, *, window: Optional[int] = None,
 
 
 def attention(cfg: ModelConfig, q, k, v, *, q_offset: int = 0,
-              mask: Optional[jax.Array] = None) -> jax.Array:
-    """Full (prefill/train) attention. q: (B,Sq,H,hd), k/v: (B,Skv,KV,hd)."""
+              mask: Optional[jax.Array] = None,
+              start: Optional[jax.Array] = None) -> jax.Array:
+    """Full (prefill/train) attention. q: (B,Sq,H,hd), k/v: (B,Skv,KV,hd).
+
+    ``start`` — (B,) int32 left-pad lengths — masks each row's pad prefix
+    (key positions ``< start[b]``) so mixed-length prompts prefill exactly
+    as they would alone. ``mask`` may be (Sq, Skv) shared or (B, Sq, Skv)
+    per-row.
+    """
     b, sq, h, hd = q.shape
     n_rep = h // k.shape[2]
     k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
@@ -59,7 +66,11 @@ def attention(cfg: ModelConfig, q, k, v, *, q_offset: int = 0,
     if mask is None:
         mask = causal_mask(sq, k.shape[1], window=cfg.sliding_window,
                            q_offset=q_offset)
-    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    if start is not None:
+        pad_ok = jnp.arange(k.shape[1])[None, :] >= start[:, None]  # (B,Skv)
+        mask = (mask[None] if mask.ndim == 2 else mask) & pad_ok[:, None, :]
+    logits = jnp.where(mask[None, None] if mask.ndim == 2 else mask[:, None],
+                       logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
 
@@ -122,12 +133,20 @@ def cache_update_decode(cache: KVCache, k_new, v_new) -> KVCache:
     return KVCache(k, v, cache.length + 1, cache.ring)
 
 
-def decode_attention(cfg: ModelConfig, q, cache: KVCache) -> jax.Array:
+def decode_attention(cfg: ModelConfig, q, cache: KVCache,
+                     start: Optional[jax.Array] = None) -> jax.Array:
     """One-token attention against the cache. q: (B,1,H,hd).
 
     The cache position of the current token must already be written
     (call :func:`cache_update_decode` first). Works for both layouts:
     for the ring cache, positions are validated modulo the window.
+
+    ``start`` — (B,) int32 — marks each row's first valid cache slot: the
+    serve engine left-pads mixed-length prompts (and admits new requests
+    mid-stream at ``cur - plen``), so slots below ``start[b]`` hold pad or
+    stale K/V and must not be attended. Full-cache layout only (the ring
+    cache re-uses slots, so a per-row start offset is not meaningful there;
+    the engine batches ring archs by equal prompt length instead).
     """
     b, _, h, hd = q.shape
     s_cache = cache.k.shape[1]
@@ -144,10 +163,13 @@ def decode_attention(cfg: ModelConfig, q, cache: KVCache) -> jax.Array:
     cur = cache.length  # tokens written INCLUDING the current one
     if cache.ring:
         # slot i holds the latest absolute position congruent to i (mod S).
-        valid = idx < jnp.minimum(cur, s_cache)
+        valid = jnp.broadcast_to(idx < jnp.minimum(cur, s_cache),
+                                 (b, s_cache))
     else:
-        valid = idx < cur
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+        valid = jnp.broadcast_to(idx < cur, (b, s_cache))
+        if start is not None:
+            valid = valid & (idx[None, :] >= start[:, None])
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
 

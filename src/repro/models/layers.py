@@ -58,8 +58,16 @@ def act_fn(name: str):
     raise ValueError(name)
 
 
-def gated_ffn(cfg: ModelConfig, x, p, shard=None):
-    """GeGLU/SwiGLU: act(x @ w_gate) * (x @ w_up) @ w_down."""
+def gated_ffn(cfg: ModelConfig, x, p, shard=None, comm=None,
+              purpose: str = "tp_mlp"):
+    """GeGLU/SwiGLU: act(x @ w_gate) * (x @ w_up) @ w_down.
+
+    Under the manual-TP serve path (``comm`` set) w_gate/w_up arrive
+    column-sharded and w_down row-sharded, so ``h @ w_down`` is a partial
+    sum: it is all-reduced on the purpose's VCI stream, and the replicated
+    ``b_down`` is added AFTER the reduce (adding it to the partial would
+    count it tp times).
+    """
     a = act_fn(cfg.hidden_act)
     h = a(x @ p["w_gate"]) * (x @ p["w_up"])
     if "b_up" in p:
@@ -67,6 +75,8 @@ def gated_ffn(cfg: ModelConfig, x, p, shard=None):
     if shard is not None:
         h = shard.ffn_hidden(h)
     y = h @ p["w_down"]
+    if comm is not None:
+        y = comm.psum(y, purpose)
     if "b_down" in p:
         y = y + p["b_down"]
     return y

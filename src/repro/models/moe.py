@@ -27,9 +27,16 @@ def capacity(tokens_per_group: int, num_experts: int, cf: float, top_k: int) -> 
     return max(4, c)
 
 
-def moe_ffn(cfg: ModelConfig, x, p, shard=None, *, inference: bool = False
-            ) -> Tuple[jax.Array, dict]:
-    """x: (B, S, d) -> (y, aux). One group per batch row."""
+def moe_ffn(cfg: ModelConfig, x, p, shard=None, *, inference: bool = False,
+            comm=None) -> Tuple[jax.Array, dict]:
+    """x: (B, S, d) -> (y, aux). One group per batch row.
+
+    ``comm`` (a :class:`repro.serve.comm.ServeComm`) selects the manual-TP
+    serve path: activations are replicated over the TP axis, expert tables
+    arrive expert-parallel (E over the axis) or ff-TP sharded, and the
+    combine collective rides the dedicated ``moe`` VCI stream instead of a
+    GSPMD resharding constraint.
+    """
     m = cfg.moe
     B, S, d = x.shape
     E, K = m.num_experts, m.top_k
@@ -64,7 +71,9 @@ def moe_ffn(cfg: ModelConfig, x, p, shard=None, *, inference: bool = False
     bd = None
     ed = None
     expert_over_model = False
-    if shard is not None:
+    if comm is not None:
+        out_buf = _moe_experts_comm(cfg, buf, p, comm)
+    elif shard is not None:
         dp = shard.dp
         tp = shard._axsize("model")
         bd = dp if B % max(1, shard._axsize(dp)) == 0 else None
@@ -93,31 +102,32 @@ def moe_ffn(cfg: ModelConfig, x, p, shard=None, *, inference: bool = False
         else:
             buf = shard.act(buf, None, ed, None, None)
 
-    h_bd = None if (shard is not None and ed is not None) else bd
-    h = act_fn(cfg.hidden_act)(
-        jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(buf.dtype))
-    ) * jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(buf.dtype))
-    if shard is not None:
-        tpff = "model" if shard.div(h.shape[-1], "model") else None
-        if expert_over_model:
-            h = shard.act(h, bd, "model", None, None)
-        elif ed is not None:
-            h = shard.act(h, None, ed, None, tpff)
-        elif "moe_dispatch" in cfg.opts:
-            h = shard.act(h, h_bd, None, None, tpff)
-        else:
-            h = shard.act(h, None, None, None, tpff)
-    # preferred_element_type pins the dot's emitted dtype: without it XLA
-    # accumulates the cross-shard partials in f32 and all-reduces 4-byte
-    # payloads (2x link bytes) — §Perf pair 5.
-    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(h.dtype),
-                         preferred_element_type=h.dtype)
+    if comm is None:
+        h_bd = None if (shard is not None and ed is not None) else bd
+        h = act_fn(cfg.hidden_act)(
+            jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(buf.dtype))
+        ) * jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(buf.dtype))
+        if shard is not None:
+            tpff = "model" if shard.div(h.shape[-1], "model") else None
+            if expert_over_model:
+                h = shard.act(h, bd, "model", None, None)
+            elif ed is not None:
+                h = shard.act(h, None, ed, None, tpff)
+            elif "moe_dispatch" in cfg.opts:
+                h = shard.act(h, h_bd, None, None, tpff)
+            else:
+                h = shard.act(h, None, None, None, tpff)
+        # preferred_element_type pins the dot's emitted dtype: without it XLA
+        # accumulates the cross-shard partials in f32 and all-reduces 4-byte
+        # payloads (2x link bytes) — §Perf pair 5.
+        out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(h.dtype),
+                             preferred_element_type=h.dtype)
 
-    if shard is not None:
-        # NOTE(§Perf pair 5, refuted): constraining out_buf's d over
-        # 'model' (to turn the partial-sum AR into a reduce-scatter) makes
-        # the combine gather reshard and REGRESSES 30.8s -> 57.9s.
-        out_buf = shard.act(out_buf, bd, None, None, None)
+        if shard is not None:
+            # NOTE(§Perf pair 5, refuted): constraining out_buf's d over
+            # 'model' (to turn the partial-sum AR into a reduce-scatter) makes
+            # the combine gather reshard and REGRESSES 30.8s -> 57.9s.
+            out_buf = shard.act(out_buf, bd, None, None, None)
 
     # ---- combine: gather expert outputs back to tokens ---------------------
     flat = out_buf.reshape(B, E * C, d)
@@ -141,6 +151,35 @@ def moe_ffn(cfg: ModelConfig, x, p, shard=None, *, inference: bool = False
     aux = {"load_balance": load_balance, "router_z": z_loss}
 
     if m.dense_residual:
-        y = y + gated_ffn(cfg, x, p["residual"], shard)
+        y = y + gated_ffn(cfg, x, p["residual"], shard, comm=comm)
 
     return y, aux
+
+
+def _moe_experts_comm(cfg: ModelConfig, buf, p, comm):
+    """Expert FFNs under the manual-TP serve path (``repro.serve.comm``).
+
+    ``buf`` — the (B, E, C, d) dispatch buffer — is replicated over the TP
+    axis (decode activations are), so the GShard dispatch all_to_all
+    degenerates to a local slice: each rank keeps the rows of its own
+    experts. The combine is the real collective — an all-gather of every
+    rank's expert outputs on the dedicated ``moe`` VCI stream. When the
+    expert count does not divide the axis the tables arrive ff-TP sharded
+    instead and the combine is the partial-sum all-reduce, same stream.
+    """
+    E = cfg.moe.num_experts
+    a = act_fn(cfg.hidden_act)
+    e_loc = p["w_gate"].shape[0]         # local expert count (E or E/tp)
+    if e_loc != E:
+        # expert-parallel: slice this rank's experts out of the replicated
+        # dispatch buffer (the decode-time dispatch), compute, all-gather.
+        assert E % e_loc == 0, (E, e_loc)
+        start = comm.rank() * e_loc
+        buf = jax.lax.dynamic_slice_in_dim(buf, start, e_loc, axis=1)
+    h = a(jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(buf.dtype))
+          ) * jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(buf.dtype))
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(h.dtype),
+                         preferred_element_type=h.dtype)
+    if e_loc != E:
+        return comm.all_gather(out_buf, "moe", gather_axis=1)
+    return comm.psum(out_buf, "moe")

@@ -240,16 +240,22 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 # ---------------------------------------------------------------------------
 
 def _attn_apply(cfg: ModelConfig, x, p, positions, shard,
-                kv: Optional[KVCache] = None, decode: bool = False):
+                kv: Optional[KVCache] = None, decode: bool = False,
+                comm=None, start=None):
+    """``comm`` (repro.serve.comm.ServeComm) selects manual TP: weights
+    arrive Megatron-sharded, head dims below are LOCAL counts, and the
+    row-parallel ``wo`` partial sum is all-reduced on the ``tp_attn`` VCI
+    stream. ``start`` is the per-row left-pad offset (serve engine)."""
     b, s, d = x.shape
     q = x @ p["wq"].astype(x.dtype)
     k = x @ p["wk"].astype(x.dtype)
     v = x @ p["wv"].astype(x.dtype)
     if cfg.use_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
-    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
-    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
-    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    # -1 head counts: under manual TP each rank holds num_heads/tp heads.
+    q = q.reshape(b, s, -1, cfg.head_dim)
+    k = k.reshape(b, s, -1, cfg.head_dim)
+    v = v.reshape(b, s, -1, cfg.head_dim)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     if shard is not None:
@@ -261,13 +267,15 @@ def _attn_apply(cfg: ModelConfig, x, p, positions, shard,
         if shard is not None:
             new_kv = KVCache(shard.kv_cache(new_kv.k), shard.kv_cache(new_kv.v),
                              new_kv.length, new_kv.ring)
-        o = decode_attention(cfg, q, new_kv)
+        o = decode_attention(cfg, q, new_kv, start=start)
     else:
-        o = attention(cfg, q, k, v)
+        o = attention(cfg, q, k, v, start=start)
         if kv is not None:  # prefill: write the cache
             new_kv = _prefill_cache(kv, k, v)
-    o = o.reshape(b, s, cfg.q_dim)
+    o = o.reshape(b, s, -1)
     o = o @ p["wo"].astype(o.dtype)
+    if comm is not None:
+        o = comm.psum(o, "tp_attn")
     if cfg.use_bias:
         o = o + p["bo"]
     return o, new_kv
@@ -294,7 +302,7 @@ def _prefill_cache(kv: KVCache, k, v) -> KVCache:
 
 
 def _dense_block(cfg: ModelConfig, x, p, positions, shard,
-                 kv=None, decode=False):
+                 kv=None, decode=False, comm=None, start=None):
     """Standard (or parallel) transformer block. Returns (x, new_kv, aux)."""
     aux = {}
     if shard is not None:
@@ -303,21 +311,24 @@ def _dense_block(cfg: ModelConfig, x, p, positions, shard,
     h = apply_norm(cfg, x, p.get("norm1"))
     h = maybe_bf16_grads(cfg, h)  # OPT(bf16_grads): bwd AR in 2-byte payloads
     attn_out, new_kv = _attn_apply(cfg, h, p["attn"], positions, shard,
-                                   kv=kv, decode=decode)
+                                   kv=kv, decode=decode, comm=comm,
+                                   start=start)
     if cfg.parallel_block:
         if cfg.moe is not None:
-            ffn_out, aux = moe_ffn(cfg, h, p["moe"], shard, inference=inference)
+            ffn_out, aux = moe_ffn(cfg, h, p["moe"], shard,
+                                   inference=inference, comm=comm)
         else:
-            ffn_out = gated_ffn(cfg, h, p["ffn"], shard)
+            ffn_out = gated_ffn(cfg, h, p["ffn"], shard, comm=comm)
         x = x + attn_out + ffn_out
     else:
         x = x + attn_out
         h2 = apply_norm(cfg, x, p.get("norm2"))
         h2 = maybe_bf16_grads(cfg, h2)
         if cfg.moe is not None:
-            ffn_out, aux = moe_ffn(cfg, h2, p["moe"], shard, inference=inference)
+            ffn_out, aux = moe_ffn(cfg, h2, p["moe"], shard,
+                                   inference=inference, comm=comm)
         else:
-            ffn_out = gated_ffn(cfg, h2, p["ffn"], shard)
+            ffn_out = gated_ffn(cfg, h2, p["ffn"], shard, comm=comm)
         x = x + ffn_out
     if shard is not None:
         x = shard.hidden(x)
@@ -343,11 +354,29 @@ def _ssm_block(cfg: ModelConfig, x, p, shard, state=None, decode=False):
 # ---------------------------------------------------------------------------
 
 class Model:
-    def __init__(self, cfg: ModelConfig, shard=None):
+    def __init__(self, cfg: ModelConfig, shard=None, comm=None):
+        """``shard`` — GSPMD sharding-constraint helper (auto axes).
+        ``comm`` — :class:`repro.serve.comm.ServeComm` for the manual-TP
+        serve path: weights arrive Megatron-sharded via shard_map in_specs
+        and every cross-rank exchange is an explicit collective on a
+        per-purpose CommContext/VCI stream. Mutually exclusive."""
+        assert shard is None or comm is None, "shard and comm are exclusive"
         self.cfg = cfg
         self.shard = shard
+        self.comm = comm
 
     # -- embeddings ------------------------------------------------------
+    def _tok_embed(self, emb, tok):
+        """Token lookup; vocab-parallel (masked lookup + psum on the
+        ``sample`` stream) when the table arrives row-sharded over TP."""
+        if self.comm is not None and emb.shape[0] != self.cfg.vocab_size:
+            v_loc = emb.shape[0]
+            loc = tok - self.comm.rank() * v_loc
+            ok = (loc >= 0) & (loc < v_loc)
+            x = jnp.where(ok[..., None], emb[jnp.clip(loc, 0, v_loc - 1)], 0)
+            return self.comm.psum(x, "sample")
+        return emb[tok]
+
     def embed(self, params, batch) -> Tuple[jax.Array, jax.Array]:
         """Returns (x: (B,S,d), positions: (B,S) or (S,))."""
         cfg = self.cfg
@@ -368,7 +397,7 @@ class Model:
             positions = jnp.arange(x.shape[1])
         else:
             emb = params["embed"]["tok"].astype(dtype)
-            x = emb[tok]
+            x = self._tok_embed(emb, tok)
             positions = jnp.arange(tok.shape[-1])
         if self.shard is not None:
             x = self.shard.hidden(x)
@@ -384,29 +413,55 @@ class Model:
             logits = x @ params["embed"]["tok"].astype(x.dtype).T
         else:
             logits = x @ params["lm_head"]["w"].astype(x.dtype)
+        if self.comm is not None and logits.shape[-1] != cfg.vocab_size:
+            # vocab-parallel logits: gather shards on the sampling stream
+            logits = self.comm.all_gather(logits, "sample",
+                                          gather_axis=logits.ndim - 1)
         if self.shard is not None and cfg.modality != "audio":
             logits = self.shard.logits(logits)
         return logits
 
     # -- full-sequence forward (train / prefill) --------------------------
-    def forward(self, params, batch, *, cache: Optional[DecodeCache] = None
+    def forward(self, params, batch, *, cache: Optional[DecodeCache] = None,
+                start: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Dict[str, jax.Array], Optional[DecodeCache]]:
-        """Returns (logits, aux, new_cache). ``cache`` non-None => prefill."""
+        """Returns (logits, aux, new_cache). ``cache`` non-None => prefill.
+
+        ``start`` — (B,) int32 left-pad lengths for mixed-length prefill:
+        row ``b``'s real tokens occupy positions ``[start[b], S)``; pad
+        positions are masked out of attention and RoPE positions are shifted
+        so each row computes exactly what it would alone (attention archs
+        only — SSM state offers no per-row mask).
+        """
         cfg = self.cfg
         x, positions = self.embed(params, batch)
+        if start is not None:
+            if cfg.family in ("ssm", "hybrid"):
+                raise NotImplementedError(
+                    "left-padded prefill needs attention masking; SSM "
+                    "recurrent state has no per-row pad mask")
+            # per-row RoPE positions: the first real token sits at 0
+            positions = jnp.maximum(positions[None, :] - start[:, None], 0)
         remat = cfg.remat != "none"
 
         if cfg.family in ("ssm", "hybrid"):
             x, new_cache = self._ssm_stack(params, x, positions, cache, remat)
             aux: Dict[str, jax.Array] = {}
         else:
-            x, aux, new_cache = self._attn_stack(params, x, positions, cache, remat)
+            x, aux, new_cache = self._attn_stack(params, x, positions, cache,
+                                                 remat, start=start)
 
         logits = self.unembed(params, x)
         return logits, aux, new_cache
 
-    def _attn_stack(self, params, x, positions, cache, remat):
+    def _attn_stack(self, params, x, positions, cache, remat, start=None):
         cfg = self.cfg
+        if self.comm is not None:
+            # VCI streams chain ordering tokens across collectives; a token
+            # updated inside a lax.scan body would leak its tracer, so the
+            # comm-mode (inference) stack unrolls the layer loop.
+            return self._attn_stack_unrolled(params, x, positions, cache,
+                                             start)
 
         def body(carry, scanned):
             x = carry
@@ -415,7 +470,8 @@ class Model:
             else:
                 lp, kv = scanned, None
             x, new_kv, aux = _dense_block(cfg, x, lp, positions, self.shard,
-                                          kv=kv, decode=False)
+                                          kv=kv, decode=False, comm=self.comm,
+                                          start=start)
             aux_vec = jnp.stack([aux.get("load_balance", jnp.zeros(())),
                                  aux.get("router_z", jnp.zeros(()))])
             return x, (new_kv, aux_vec)
@@ -436,6 +492,35 @@ class Model:
             new_cache = None
         aux = {"load_balance": aux_v[:, 0].sum(), "router_z": aux_v[:, 1].sum()}
         return x, aux, new_cache
+
+    def _attn_stack_unrolled(self, params, x, positions, cache, start=None):
+        """Python-loop layer stack for the comm (VCI-stream) serve path."""
+        cfg = self.cfg
+        take = jax.tree_util.tree_map
+        ks, vs = [], []
+        lb = rz = jnp.zeros(())
+        for l in range(cfg.num_layers):
+            lp = take(lambda a: a[l], params["layers"])
+            kv = None
+            if cache is not None:
+                kv = KVCache(cache.kv.k[l], cache.kv.v[l], cache.kv.length,
+                             cache.kv.ring)
+            x, new_kv, aux = _dense_block(cfg, x, lp, positions, None,
+                                          kv=kv, decode=False,
+                                          comm=self.comm, start=start)
+            if new_kv is not None:
+                ks.append(new_kv.k)
+                vs.append(new_kv.v)
+            lb = lb + aux.get("load_balance", jnp.zeros(()))
+            rz = rz + aux.get("router_z", jnp.zeros(()))
+        new_cache = None
+        if cache is not None:
+            s_new = x.shape[1]
+            new_cache = DecodeCache(
+                KVCache(jnp.stack(ks), jnp.stack(vs),
+                        cache.kv.length + s_new, cache.kv.ring),
+                None, cache.length + s_new)
+        return x, {"load_balance": lb, "router_z": rz}, new_cache
 
     def _ssm_stack(self, params, x, positions, cache, remat):
         cfg = self.cfg
@@ -525,9 +610,15 @@ class Model:
         return x, None
 
     # -- one-token decode --------------------------------------------------
-    def decode_step(self, params, tokens, cache: DecodeCache
+    def decode_step(self, params, tokens, cache: DecodeCache,
+                    start: Optional[jax.Array] = None
                     ) -> Tuple[jax.Array, DecodeCache]:
-        """tokens: (B,1) (or (B,K,1) audio). Returns (logits, new_cache)."""
+        """tokens: (B,1) (or (B,K,1) audio). Returns (logits, new_cache).
+
+        ``start`` — (B,) int32 per-row first-valid cache slot (the serve
+        engine's left-pad/late-admission offset): cache reads mask slots
+        below it and RoPE positions count from it.
+        """
         cfg = self.cfg
         dtype = jnp.dtype(cfg.dtype)
         if cfg.modality == "audio":
@@ -535,27 +626,52 @@ class Model:
             x = jnp.sum(jax.vmap(lambda e, t: e[t], in_axes=(0, 1),
                                  out_axes=1)(emb, tokens), axis=1)
         else:
-            x = params["embed"]["tok"].astype(dtype)[tokens]
-        positions = cache.length[None, None] + jnp.zeros(
-            (x.shape[0], 1), jnp.int32)
+            x = self._tok_embed(params["embed"]["tok"].astype(dtype), tokens)
+        if start is not None:
+            if cfg.family in ("ssm", "hybrid"):
+                raise NotImplementedError(
+                    "per-row start offsets need attention masking")
+            positions = (cache.length - start)[:, None]
+        else:
+            positions = cache.length[None, None] + jnp.zeros(
+                (x.shape[0], 1), jnp.int32)
         if self.shard is not None:
             x = self.shard.hidden(x)
 
         if cfg.family in ("ssm", "hybrid"):
             x, new_cache = self._decode_ssm(params, x, positions, cache)
         else:
-            x, new_cache = self._decode_attn(params, x, positions, cache)
+            x, new_cache = self._decode_attn(params, x, positions, cache,
+                                             start=start)
         logits = self.unembed(params, x)
         return logits, new_cache
 
-    def _decode_attn(self, params, x, positions, cache):
+    def _decode_attn(self, params, x, positions, cache, start=None):
         cfg = self.cfg
+        if self.comm is not None:  # unrolled: see _attn_stack_unrolled
+            take = jax.tree_util.tree_map
+            ks, vs = [], []
+            for l in range(cfg.num_layers):
+                lp = take(lambda a: a[l], params["layers"])
+                kv = KVCache(cache.kv.k[l], cache.kv.v[l], cache.kv.length,
+                             cache.kv.ring)
+                x, new_kv, _ = _dense_block(cfg, x, lp, positions, None,
+                                            kv=kv, decode=True,
+                                            comm=self.comm, start=start)
+                ks.append(new_kv.k)
+                vs.append(new_kv.v)
+            new_cache = DecodeCache(
+                KVCache(jnp.stack(ks), jnp.stack(vs), cache.kv.length + 1,
+                        cache.kv.ring),
+                None, cache.length + 1)
+            return x, new_cache
 
         def body(carry, scanned):
             x = carry
             lp, kv = scanned
             x, new_kv, _ = _dense_block(cfg, x, lp, positions, self.shard,
-                                        kv=kv, decode=True)
+                                        kv=kv, decode=True, comm=self.comm,
+                                        start=start)
             return x, new_kv
 
         kv_stack = KVCache(cache.kv.k, cache.kv.v,

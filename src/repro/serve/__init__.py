@@ -1,3 +1,16 @@
-from repro.serve.engine import ServeEngine, greedy_sample, make_serve_step
+from repro.serve.comm import PURPOSES, ServeComm, ServeCommPlan
+from repro.serve.engine import (
+    Request,
+    ServeEngine,
+    greedy_sample,
+    make_prefill,
+    make_serve_step,
+    select_tokens,
+    temperature_sample,
+)
 
-__all__ = ["ServeEngine", "greedy_sample", "make_serve_step"]
+__all__ = [
+    "PURPOSES", "Request", "ServeComm", "ServeCommPlan", "ServeEngine",
+    "greedy_sample", "make_prefill", "make_serve_step", "select_tokens",
+    "temperature_sample",
+]

@@ -2,25 +2,54 @@
 
 ``make_serve_step`` builds the one-token decode function the dry-run lowers
 for the decode shapes (``decode_32k``, ``long_500k``): ONE new token against
-a ``seq_len``-deep cache.
+a ``seq_len``-deep cache. With a :class:`~repro.serve.comm.ServeCommPlan`
+it instead builds the manual-TP step whose collectives (attention/FFN
+partial sums, MoE combine, vocab-parallel sampling gather) each ride their
+own CommContext/VCI stream — the serve-side analogue of the gradient
+bucketing path.
 
-``ServeEngine`` is the host-side loop: batched requests, prefill, iterative
-greedy/temperature decoding, and per-request stop handling — a deliberately
-small continuous-batching core (static batch, replace-on-finish).
+``ServeEngine`` is the host-side continuous-batching loop:
+
+* mixed-length prompts are LEFT-padded to a common width and prefilled with
+  per-row pad masks + shifted RoPE positions, so a request's tokens are
+  identical no matter what it is batched with (the old engine truncated the
+  batch to the shortest prompt);
+* greedy or per-request temperature sampling, per-request ``stop_token``
+  and ``max_new_tokens``;
+* early slot recycling: a finished slot is re-filled mid-stream by
+  prefilling the next request's prompt into the cache rows just below the
+  shared write cursor (its ``start`` offset masks everything older);
+* ``generate()`` validates ``prompt_len + max_new_tokens <= max_len`` up
+  front — decode can never write past the cache depth.
+
+Architectures whose decode state cannot be pad-masked per row (SSM/hybrid
+recurrences, ring caches, VLM/audio frontends) fall back to equal-length
+grouped batches — same results, no corruption, just less packing.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import set_mesh, shard_map
 from repro.configs.base import ModelConfig
-from repro.dist.sharding import Sharder
+from repro.dist.sharding import Sharder, batch_axes
+from repro.models.attention import KVCache
 from repro.models.transformer import DecodeCache, Model, init_cache
+from repro.serve.comm import (
+    TP_AXIS,
+    ServeCommPlan,
+    serve_cache_specs,
+    serve_param_specs,
+    serve_tp_validate,
+)
 
 
 def greedy_sample(logits: jax.Array) -> jax.Array:
@@ -33,80 +62,463 @@ def temperature_sample(key, logits, temperature: float = 1.0):
                                   ).astype(jnp.int32)
 
 
-def make_serve_step(cfg: ModelConfig, mesh=None
-                    ) -> Callable[[Any, jax.Array, DecodeCache], Tuple]:
-    """Returns ``serve_step(params, tokens, cache) -> (next_tokens, cache)``.
+def select_tokens(logits, temps=None, key=None) -> jax.Array:
+    """Greedy/temperature sampling with PER-ROW temperatures.
+
+    ``temps`` — (B,) float32; rows with ``temp <= 0`` take the argmax, rows
+    with ``temp > 0`` sample from the tempered categorical. ``temps=None``
+    is pure greedy (and needs no key). logits: (B, 1, V) or (B, K, 1, V).
+    """
+    greedy = greedy_sample(logits)
+    if temps is None:
+        return greedy
+    if key is None:
+        raise ValueError("select_tokens: temps given without a PRNG key — "
+                         "pass key=... or temps=None for greedy")
+    b = logits.shape[0]
+    t = temps.reshape((b,) + (1,) * (logits.ndim - 1 - 1))
+    sampled = jax.random.categorical(
+        key, logits / jnp.maximum(t, 1e-4)[..., None]).astype(jnp.int32)
+    use = (temps > 0).reshape((b,) + (1,) * (greedy.ndim - 1))
+    return jnp.where(use, sampled, greedy)
+
+
+def _last_logits(cfg: ModelConfig, logits):
+    if cfg.modality == "audio":
+        return logits[..., -1:, :]
+    return logits[:, -1:, :]
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None, comm_plan=None, lane: int = 0
+                    ) -> Callable[..., Tuple]:
+    """Returns ``serve_step(params, tokens, cache, start=None, temps=None,
+    key=None) -> (next_tokens, cache)``.
 
     tokens: (B,1) int32 (or (B,K,1) audio). This is the function the decode
-    dry-run shapes lower.
+    dry-run shapes lower. ``comm_plan`` selects the manual-TP VCI-stream
+    path (see :mod:`repro.serve.comm`).
     """
+    if comm_plan is not None:
+        return _make_serve_step_comm(cfg, mesh, comm_plan, lane)
     shard = Sharder(mesh, cfg) if mesh is not None else None
     model = Model(cfg, shard)
 
-    def serve_step(params, tokens, cache: DecodeCache):
-        logits, new_cache = model.decode_step(params, tokens, cache)
-        nxt = greedy_sample(logits)
+    def serve_step(params, tokens, cache: DecodeCache, start=None,
+                   temps=None, key=None):
+        logits, new_cache = model.decode_step(params, tokens, cache,
+                                              start=start)
+        nxt = select_tokens(logits, temps, key)
         return nxt, new_cache
 
     return serve_step
 
 
-def make_prefill(cfg: ModelConfig, mesh=None):
+def make_prefill(cfg: ModelConfig, mesh=None, comm_plan=None, lane: int = 0):
+    """Returns ``prefill(params, batch, cache, start=None, temps=None,
+    key=None) -> (next_tokens, cache)`` sampling the first new token."""
+    if comm_plan is not None:
+        return _make_prefill_comm(cfg, mesh, comm_plan, lane)
     shard = Sharder(mesh, cfg) if mesh is not None else None
     model = Model(cfg, shard)
 
-    def prefill(params, batch, cache: DecodeCache):
-        logits, _, new_cache = model.forward(params, batch, cache=cache)
-        if cfg.modality == "audio":
-            nxt = greedy_sample(logits[..., -1:, :])
-        else:
-            nxt = greedy_sample(logits[:, -1:, :])
+    def prefill(params, batch, cache: DecodeCache, start=None, temps=None,
+                key=None):
+        logits, _, new_cache = model.forward(params, batch, cache=cache,
+                                             start=start)
+        nxt = select_tokens(_last_logits(cfg, logits), temps, key)
         return nxt, new_cache
 
     return prefill
 
 
+# ---------------------------------------------------------------------------
+# the manual-TP (VCI stream) step builders
+# ---------------------------------------------------------------------------
+
+def _mesh_tp(mesh) -> int:
+    return dict(mesh.shape).get(TP_AXIS, 1)
+
+
+def _mesh_batch(mesh) -> Tuple[Any, int]:
+    """(spec entry, shard count) for the batch dim over the non-TP axes."""
+    dp = batch_axes(mesh)
+    n = 1
+    for a in dp:
+        n *= dict(mesh.shape)[a]
+    return (dp[0] if len(dp) == 1 else tuple(dp)), n
+
+
+def _make_serve_step_comm(cfg: ModelConfig, mesh, comm_plan: ServeCommPlan,
+                          lane: int):
+    assert mesh is not None, "comm_plan needs a mesh with a 'model' axis"
+    tp = _mesh_tp(mesh)
+    serve_tp_validate(cfg, tp)
+    dpe, nb = _mesh_batch(mesh)
+
+    def serve_step(params, tokens, cache, start, temps, key):
+        bd = dpe if (nb > 1 and tokens.shape[0] % nb == 0) else None
+        nshard = nb if bd is not None else 1
+
+        def inner(params, tokens, cache, start, temps, key):
+            comm = comm_plan.comm(lane)
+            model = Model(cfg, None, comm=comm)
+            logits, new_cache = model.decode_step(params, tokens, cache,
+                                                  start=start)
+            logits = comm.drain(logits)
+            return select_tokens(logits, temps, key), new_cache
+
+        cspec = serve_cache_specs(cache, tp, nshard, batch_axis=dpe)
+        f = shard_map(
+            inner, mesh=mesh,
+            in_specs=(serve_param_specs(cfg, params, tp), P(bd, None),
+                      cspec, P(bd), P(bd), P()),
+            out_specs=(P(bd, None), cspec),
+            check_vma=False, axis_names=set(mesh.axis_names))
+        return f(params, tokens, cache, start, temps, key)
+
+    return serve_step
+
+
+def _make_prefill_comm(cfg: ModelConfig, mesh, comm_plan: ServeCommPlan,
+                       lane: int):
+    assert mesh is not None, "comm_plan needs a mesh with a 'model' axis"
+    tp = _mesh_tp(mesh)
+    serve_tp_validate(cfg, tp)
+    dpe, nb = _mesh_batch(mesh)
+
+    def prefill(params, batch, cache, start, temps, key):
+        tokens = batch["tokens"]
+        bd = dpe if (nb > 1 and tokens.shape[0] % nb == 0) else None
+        nshard = nb if bd is not None else 1
+
+        def inner(params, batch, cache, start, temps, key):
+            comm = comm_plan.comm(lane)
+            model = Model(cfg, None, comm=comm)
+            logits, _, new_cache = model.forward(params, batch, cache=cache,
+                                                 start=start)
+            logits = comm.drain(logits)
+            nxt = select_tokens(_last_logits(cfg, logits), temps, key)
+            return nxt, new_cache
+
+        cspec = serve_cache_specs(cache, tp, nshard, batch_axis=dpe)
+        f = shard_map(
+            inner, mesh=mesh,
+            in_specs=(serve_param_specs(cfg, params, tp),
+                      {"tokens": P(bd, None)},
+                      cspec, P(bd), P(bd), P()),
+            out_specs=(P(bd, None), cspec),
+            check_vma=False, axis_names=set(mesh.axis_names))
+        return f(params, batch, cache, start, temps, key)
+
+    return prefill
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
 @dataclasses.dataclass
 class Request:
-    prompt: np.ndarray           # (S,) or (K,S) token ids
+    prompt: np.ndarray                    # (S,) or (K,S) token ids
     max_new_tokens: int = 32
+    temperature: Optional[float] = None   # None -> engine default; 0 = greedy
+    stop_token: Optional[int] = None      # finish early when sampled
     generated: Optional[np.ndarray] = None
 
 
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = True
+
+    def activate(self, req: Request):
+        self.req, self.tokens, self.done = req, [], False
+
+    def finish(self):
+        self.done = True
+        if self.req is not None:
+            self.req.generated = np.asarray(self.tokens, np.int32)
+
+
+_ADMIT_ALIGN = 8  # admission prompts pad to multiples of this (fewer traces)
+
+
 class ServeEngine:
-    """Static-batch serving loop with greedy decoding."""
+    """Continuous-batching serving loop (see module docstring).
+
+    ``mesh`` + ``comm_plan`` (or ``num_vcis``) select the manual-TP decode
+    whose collectives ride per-purpose VCI streams; with ``mesh=None`` the
+    same loop runs single-device. Early slot recycling (mid-stream
+    admission) is host-driven and currently single-device only.
+    """
 
     def __init__(self, cfg: ModelConfig, params, *, batch_size: int,
-                 max_len: int, mesh=None, cache_dtype=jnp.float32):
+                 max_len: int, mesh=None, cache_dtype=jnp.float32,
+                 comm_plan: Optional[ServeCommPlan] = None,
+                 num_vcis: Optional[int] = None, vci_policy: str = "fcfs",
+                 progress: str = "hybrid", token_impl: str = "barrier",
+                 temperature: float = 0.0, seed: int = 0):
         self.cfg = cfg
         self.params = params
         self.batch_size = batch_size
         self.max_len = max_len
-        self._prefill = jax.jit(make_prefill(cfg, mesh))
-        self._step = jax.jit(make_serve_step(cfg, mesh), donate_argnums=(2,))
+        self.mesh = mesh
+        self.temperature = temperature
+        if comm_plan is None and num_vcis is not None:
+            if mesh is None or _mesh_tp(mesh) <= 1:
+                raise ValueError("num_vcis needs a mesh with a 'model' axis "
+                                 ">1 (the TP streams live there)")
+            comm_plan = ServeCommPlan(num_vcis=num_vcis,
+                                      vci_policy=vci_policy,
+                                      progress=progress,
+                                      token_impl=token_impl)
+        self.comm_plan = comm_plan
+        self._prefill = jax.jit(make_prefill(cfg, mesh, comm_plan))
+        self._step = jax.jit(make_serve_step(cfg, mesh, comm_plan),
+                             donate_argnums=(2,))
+        self._admit_fns: Dict[int, Callable] = {}
         self._cache_dtype = cache_dtype
+        self._key = jax.random.PRNGKey(seed)
+        self._nkey = 0
+        self._ring = (cfg.sliding_window is not None
+                      and cfg.sliding_window < max_len)
+        # left-padded mixed-length batching needs per-row attention masks;
+        # SSM/hybrid state, ring caches and non-text frontends can't provide
+        # them -> equal-length grouped batches for those.
+        self._padded_ok = (cfg.family in ("dense", "moe")
+                           and cfg.modality == "text" and not self._ring)
+        # mid-stream admission re-prefills single requests; keep it off the
+        # sharded path (B=1 doesn't shard over the data axes).
+        self._can_admit = mesh is None
 
+    # -- small helpers ---------------------------------------------------
+    def _next_key(self):
+        self._nkey += 1
+        return jax.random.fold_in(self._key, self._nkey)
+
+    def _temp_of(self, r: Request) -> float:
+        return self.temperature if r.temperature is None else r.temperature
+
+    def _validate(self, requests: List[Request]) -> None:
+        for i, r in enumerate(requests):
+            plen = int(r.prompt.shape[-1])
+            if plen < 1:
+                raise ValueError(f"request {i}: empty prompt")
+            if r.max_new_tokens < 1:
+                raise ValueError(f"request {i}: max_new_tokens < 1")
+            if plen + r.max_new_tokens > self.max_len:
+                raise ValueError(
+                    f"request {i}: prompt_len {plen} + max_new_tokens "
+                    f"{r.max_new_tokens} exceeds the cache depth "
+                    f"(max_len={self.max_len}); decode would write past the "
+                    f"cache — shorten the request or raise max_len")
+
+    # -- public API ------------------------------------------------------
     def generate(self, requests: List[Request]) -> List[Request]:
-        cfg = self.cfg
-        out: List[Request] = []
-        for i in range(0, len(requests), self.batch_size):
-            out.extend(self._run_batch(requests[i: i + self.batch_size]))
-        return out
+        self._validate(requests)
+        ctx = (set_mesh(self.mesh) if self.mesh is not None
+               else contextlib.nullcontext())
+        with ctx:
+            if self._padded_ok:
+                pending = list(requests)
+                while pending:
+                    batch = self._take_batch(pending)
+                    self._run_continuous(batch, pending)
+            else:
+                # grouped fallback: equal prompt lengths per batch
+                groups: Dict[int, List[Request]] = {}
+                for r in requests:
+                    groups.setdefault(int(r.prompt.shape[-1]), []).append(r)
+                for _, rs in sorted(groups.items()):
+                    for i in range(0, len(rs), self.batch_size):
+                        self._run_grouped(rs[i: i + self.batch_size])
+        return requests
 
-    def _run_batch(self, reqs: List[Request]) -> List[Request]:
+    # -- batch formation -------------------------------------------------
+    def _take_batch(self, pending: List[Request]) -> List[Request]:
+        """Pop up to ``batch_size`` requests whose LEFT-PADDED runway fits:
+        with pad width P = max(prompt lens), every member still needs
+        ``P + max_new <= max_len`` (padding consumes cache depth)."""
+        batch: List[Request] = []
+        pad = 0
+        i = 0
+        while i < len(pending) and len(batch) < self.batch_size:
+            r = pending[i]
+            p_new = max(pad, int(r.prompt.shape[-1]))
+            if all(p_new + q.max_new_tokens <= self.max_len
+                   for q in batch + [r]):
+                batch.append(pending.pop(i))
+                pad = p_new
+            else:
+                i += 1
+        assert batch, "a validated request always fits alone"
+        return batch
+
+    # -- continuous (left-padded) path ------------------------------------
+    def _run_continuous(self, batch: List[Request],
+                        pending: List[Request]) -> None:
+        cfg = self.cfg
+        B = self.batch_size
+        slots = [_Slot() for _ in range(B)]
+        for s, r in zip(slots, batch):
+            s.activate(r)
+        plens = [int(s.req.prompt.shape[-1]) if s.req is not None
+                 else int(batch[0].prompt.shape[-1]) for s in slots]
+        pad = max(plens)
+        tokens = np.zeros((B, pad), np.int32)
+        for i, s in enumerate(slots):
+            prm = (s.req or batch[0]).prompt
+            tokens[i, pad - plens[i]:] = prm
+        start = np.asarray([pad - p for p in plens], np.int32)
+        temps = np.asarray([self._temp_of(s.req) if s.req else 0.0
+                            for s in slots], np.float32)
+        cache = init_cache(cfg, B, self.max_len, dtype=self._cache_dtype)
+        nxt, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(tokens)}, cache,
+            jnp.asarray(start), jnp.asarray(temps), self._next_key())
+        cur = pad
+
+        def record(s: _Slot, t: int) -> None:
+            if s.req.stop_token is not None and t == s.req.stop_token:
+                s.finish()
+                return
+            s.tokens.append(t)
+            if len(s.tokens) >= s.req.max_new_tokens:
+                s.finish()
+
+        while True:
+            toks = np.array(nxt)  # copy: admission may overwrite a row
+            admitted = False
+            for i, s in enumerate(slots):
+                if not s.done and s.req is not None:
+                    record(s, int(toks[i, 0]))
+            # early slot recycling: prefill the next request into a finished
+            # slot just below the shared cursor (start masks older rows)
+            if self._can_admit and pending:
+                for i, s in enumerate(slots):
+                    if not s.done or not pending:
+                        continue
+                    j = self._admittable(pending, cur)
+                    if j is None:
+                        continue
+                    r = pending.pop(j)
+                    tok0, cache = self._admit(r, cache, i, cur)
+                    s.activate(r)
+                    start[i] = cur - int(r.prompt.shape[-1])
+                    temps[i] = self._temp_of(r)
+                    toks[i, 0] = tok0
+                    record(s, tok0)  # the admission prefill's first token
+                    admitted = True
+            if all(s.done or s.req is None for s in slots):
+                break
+            if admitted:
+                nxt = jnp.asarray(toks)
+            if cur >= self.max_len:  # defensive: budgets guarantee this
+                for s in slots:      # never trips (validated runways)
+                    if not s.done:
+                        s.finish()
+                break
+            nxt, cache = self._step(self.params, nxt, cache,
+                                    jnp.asarray(start), jnp.asarray(temps),
+                                    self._next_key())
+            cur += 1
+
+    def _admittable(self, pending: List[Request], cur: int) -> Optional[int]:
+        """Index of the first pending request that fits at cursor ``cur``:
+        its prompt must fit below the cursor and its token budget inside the
+        remaining cache depth."""
+        for j, r in enumerate(pending):
+            plen = int(r.prompt.shape[-1])
+            if plen <= cur and cur + r.max_new_tokens <= self.max_len:
+                return j
+        return None
+
+    def _admit(self, r: Request, cache, slot: int, cur: int):
+        """Prefill ``r`` alone and splice its KV rows into ``cache[slot]``
+        at ``[cur - plen, cur)``; returns (first token, cache)."""
+        plen = int(r.prompt.shape[-1])
+        p_adm = min(-(-plen // _ADMIT_ALIGN) * _ADMIT_ALIGN, cur)
+        fn = self._admit_fn(p_adm)
+        tokens = np.zeros((1, p_adm), np.int32)
+        tokens[0, p_adm - plen:] = r.prompt
+        nxt, cache = fn(self.params, jnp.asarray(tokens), cache,
+                        jnp.asarray(slot, jnp.int32),
+                        jnp.asarray(cur - p_adm, jnp.int32),
+                        jnp.asarray([p_adm - plen], jnp.int32),
+                        jnp.asarray([self._temp_of(r)], jnp.float32),
+                        self._next_key())
+        return int(np.asarray(nxt)[0, 0]), cache
+
+    def _admit_fn(self, p_adm: int):
+        """Jitted single-request admission prefill, cached per padded
+        prompt width (widths are rounded to ``_ADMIT_ALIGN`` to bound the
+        number of traces)."""
+        fn = self._admit_fns.get(p_adm)
+        if fn is not None:
+            return fn
+        cfg = self.cfg
+        model = Model(cfg)
+
+        def admit(params, tokens, cache, slot, dest, start1, temp1, key):
+            tmp = init_cache(cfg, 1, tokens.shape[1],
+                             dtype=self._cache_dtype)
+            logits, _, tmp = model.forward(params, {"tokens": tokens},
+                                           cache=tmp, start=start1)
+            nxt = select_tokens(_last_logits(cfg, logits), temp1, key)
+            k = jax.lax.dynamic_update_slice(
+                cache.kv.k, tmp.kv.k.astype(cache.kv.k.dtype),
+                (0, slot, dest, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache.kv.v, tmp.kv.v.astype(cache.kv.v.dtype),
+                (0, slot, dest, 0, 0))
+            new_cache = DecodeCache(
+                KVCache(k, v, cache.kv.length, cache.kv.ring), cache.ssm,
+                cache.length)
+            return nxt, new_cache
+
+        fn = jax.jit(admit, donate_argnums=(2,))
+        self._admit_fns[p_adm] = fn
+        return fn
+
+    # -- grouped (equal prompt length) fallback ---------------------------
+    def _run_grouped(self, reqs: List[Request]) -> None:
         cfg = self.cfg
         b = len(reqs)
-        plen = min(min(r.prompt.shape[-1] for r in reqs), self.max_len - 1)
-        prompts = np.stack([r.prompt[..., :plen] for r in reqs])
+        prompts = np.stack([r.prompt for r in reqs])
         cache = init_cache(cfg, b, self.max_len, dtype=self._cache_dtype)
-        batch = {"tokens": jnp.asarray(prompts)}
-        nxt, cache = self._prefill(self.params, batch, cache)
-        steps = max(r.max_new_tokens for r in reqs)
+        temps = np.asarray([self._temp_of(r) for r in reqs], np.float32)
+        # comm-mode step functions take concrete (all-zero) start offsets;
+        # the plain path keeps None (SSM/audio reject per-row offsets).
+        start = (None if self.comm_plan is None
+                 else jnp.zeros((b,), jnp.int32))
+        nxt, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(prompts)}, cache, start,
+            jnp.asarray(temps), self._next_key())
+        text = cfg.modality == "text"
         gen = [np.asarray(nxt)]
-        for _ in range(steps - 1):
-            nxt, cache = self._step(self.params, nxt, cache)
+        stopped = [False] * b
+
+        def update_stops():
+            if not text:
+                return
+            for i, r in enumerate(reqs):
+                if r.stop_token is not None and \
+                        int(gen[-1][i, 0]) == r.stop_token:
+                    stopped[i] = True
+
+        update_stops()
+        while any(not stopped[i] and len(gen) < r.max_new_tokens
+                  for i, r in enumerate(reqs)):
+            nxt, cache = self._step(self.params, nxt, cache, start,
+                                    jnp.asarray(temps), self._next_key())
             gen.append(np.asarray(nxt))
+            update_stops()
         toks = np.concatenate(gen, axis=-1)  # (B,steps) or (B,K,steps)
         for i, r in enumerate(reqs):
-            r.generated = toks[i][..., : r.max_new_tokens]
-        return reqs
+            seq = toks[i][..., : r.max_new_tokens]
+            if text and r.stop_token is not None:
+                hits = np.nonzero(seq == r.stop_token)[0]
+                if hits.size:
+                    seq = seq[: int(hits[0])]
+            r.generated = seq

@@ -344,6 +344,56 @@ def check_moe_expert_parallel_all_to_all():
 
 
 
+def check_serve_streams_match_single_stream():
+    """Serve-path VCI streams (manual-TP decode on a data x model mesh,
+    collectives on per-purpose CommContexts) must produce IDENTICAL tokens
+    to the single-device engine, for a dense tied-embedding arch and an
+    expert-parallel MoE arch, at num_vcis=1 (everything collides on the
+    fallback stream) and num_vcis=8 (dedicated streams). Mixed-length
+    batches ride along so left-padded prefill is exercised under TP too."""
+    from repro.configs import get_config
+    from repro.models.transformer import init_params
+    from repro.serve.comm import PURPOSES, ServeCommPlan
+    from repro.serve.engine import Request, ServeEngine
+
+    devs = np.array(jax.devices()[:8]).reshape(4, 2)
+    mesh = Mesh(devs, ("data", "model"))
+
+    for arch in ("olmo-1b-smoke", "mixtral-8x22b-smoke"):
+        cfg = get_config(arch)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+
+        def make_requests():
+            rng = np.random.default_rng(7)
+            return [Request(prompt=rng.integers(0, cfg.vocab_size, (plen,),
+                                                dtype=np.int32),
+                            max_new_tokens=5)
+                    for plen in (5, 9, 3, 7)]
+
+        ref = make_requests()
+        ServeEngine(cfg, params, batch_size=4, max_len=48).generate(ref)
+
+        for num_vcis in (1, 8):
+            plan = ServeCommPlan(num_vcis=num_vcis, token_impl="data")
+            eng = ServeEngine(cfg, params, batch_size=4, max_len=48,
+                              mesh=mesh, comm_plan=plan)
+            got = make_requests()
+            eng.generate(got)
+            for i, (a, b) in enumerate(zip(got, ref)):
+                np.testing.assert_array_equal(
+                    a.generated, b.generated,
+                    err_msg=f"{arch} num_vcis={num_vcis} request {i}")
+            # the plan realized the expected mapping: exhausted pool -> all
+            # contexts share the fallback; ample pool -> distinct streams
+            indices = set(plan.vci_map().values())
+            if num_vcis == 1:
+                assert indices == {0}, plan.vci_map()
+                assert plan.stats.fallback_hits == len(PURPOSES)
+            else:
+                assert len(indices) == len(PURPOSES), plan.vci_map()
+                assert plan.stats.fallback_hits == 0
+
+
 def check_vci_trainer_lowers_production_mesh():
     """The paper-mode (shard_map + VCI buckets) trainer must lower/compile
     on the full production mesh (run with 256+ virtual devices)."""

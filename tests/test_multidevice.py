@@ -50,6 +50,12 @@ def test_moe_expert_parallel_all_to_all(multidev):
     _run(multidev, "moe_expert_parallel_all_to_all", devices=4)
 
 
+def test_serve_streams_match_single_stream(multidev):
+    """Manual-TP decode on VCI streams == single-device tokens (dense+MoE),
+    with the realized VCI mapping checked at pool sizes 1 and 8."""
+    _run(multidev, "serve_streams_match_single_stream")
+
+
 @pytest.mark.slow
 def test_vci_trainer_lowers_production_mesh(multidev):
     _run(multidev, "vci_trainer_lowers_production_mesh", devices=512)

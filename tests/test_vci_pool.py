@@ -74,6 +74,63 @@ class TestVCIPool:
         assert pool.stats.max_contexts_per_vci == 3
         assert pool.stats.acquires == 4
 
+    def test_hash_on_index_zero_is_not_a_fallback_hit(self):
+        """A hash assignment landing on VCI 0 is a normal mapping, not pool
+        exhaustion — recording it as a fallback skewed the mapping-mismatch
+        benchmark (regression for the vci.py stats miscount)."""
+        pool = VCIPool(num_vcis=2, policy="hash")
+        landed_on_zero = 0
+        for i in range(32):
+            idx = pool.acquire(f"ctx{i}").index
+            landed_on_zero += int(idx == VCIPool.FALLBACK)
+        assert landed_on_zero > 0, "need at least one hash hit on VCI 0"
+        assert pool.stats.fallback_hits == 0
+
+    def test_round_robin_never_counts_fallback(self):
+        pool = VCIPool(num_vcis=4, policy="round_robin")
+        for i in range(12):
+            pool.acquire(f"c{i}")
+        assert pool.stats.fallback_hits == 0
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_single_vci_pool_counts_fallback(self, policy):
+        """num_vcis=1 is permanent exhaustion under EVERY policy (a hash
+        landing on 0 % 1 is not a free assignment there)."""
+        pool = VCIPool(num_vcis=1, policy=policy)
+        pool.acquire("a")
+        assert pool.stats.fallback_hits == 1, policy
+
+    def test_hinted_unhinted_share_without_fallback_hit(self):
+        """Unhinted contexts under the hinted policy share VCI 0 by design;
+        only a 'dedicated' request against an exhausted pool is a hit."""
+        pool = VCIPool(num_vcis=2, policy="hinted")
+        pool.acquire("bg")                       # unhinted -> shares, no hit
+        pool.acquire("hot", hint="dedicated")    # gets VCI 1
+        assert pool.stats.fallback_hits == 0
+        pool.acquire("hot2", hint="dedicated")   # exhausted -> genuine hit
+        assert pool.stats.fallback_hits == 1
+
+    def test_shared_hint_counts_fallback(self):
+        pool = VCIPool(num_vcis=4, policy="fcfs")
+        pool.acquire("x", hint="shared")
+        assert pool.stats.fallback_hits == 1
+
+    def test_release_decrements_live_contexts(self):
+        """max_contexts_per_vci must reflect LIVE contexts: releasing a
+        context returns its slot in the per-VCI occupancy map."""
+        pool = VCIPool(num_vcis=2, policy="fcfs")
+        for i in range(4):
+            pool.acquire(f"c{i}")    # one on VCI 1, three on the fallback
+        assert pool.stats.max_contexts_per_vci == 3
+        pool.release("c1")           # fallback occupant
+        pool.release("c2")           # fallback occupant
+        assert pool.stats.max_contexts_per_vci == 1
+        assert pool.stats.releases == 2
+        pool.release("c0")           # VCI 1 occupant
+        pool.release("c3")           # last fallback occupant
+        assert pool.stats.max_contexts_per_vci == 0
+        assert pool.stats.acquires == 4 and pool.stats.releases == 4
+
     @pytest.mark.parametrize("policy", POLICIES)
     def test_indices_always_in_range(self, policy):
         pool = VCIPool(num_vcis=4, policy=policy)
