@@ -25,7 +25,6 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import CSV, SMOKE, block, mesh_1d, time_fn

@@ -38,6 +38,9 @@ BENCHMARKS = [
      "ZeRO-1 sharded AdamW on the VCI streams (scatter + param gather)"),
     ("benchmarks.bucket_path", [], 8,
      "fast bucketed-reduction path: plan x pack x reduction(+zero1) ablation"),
+    ("benchmarks.overlap_schedule", [], 8,
+     "bucket-ready overlap: exposed-comm vs schedule x num_vcis x optimizer "
+     "(training-side Fig 17: same wire bytes, lower critical path)"),
     ("benchmarks.serve_streams", [], 8,
      "serve-path VCI streams: decode tok/s vs pool size (Fig 4/17 at the "
      "serving API level)"),

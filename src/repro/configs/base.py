@@ -9,9 +9,7 @@ CPU scale, per the assignment (<=2 layers, d_model<=512, <=4 experts).
 
 from __future__ import annotations
 
-import dataclasses
-import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 
@@ -168,12 +166,10 @@ class ModelConfig:
         embed = self.vocab_size * self.d_model * self.num_codebooks
         head = 0 if self.tie_embeddings else self.vocab_size * self.d_model * self.num_codebooks
         if self.family == "hybrid":
-            nattn = self.num_layers // self.hybrid_attn_every
             body = self.num_layers * self.ssm_params()
             # ONE shared attention block (+ its FFN), reused at each interleave
             shared = self.attn_params() + self.ffn_params_dense()
             body += shared  # weights are shared => counted once
-            del nattn
         else:
             body = self.num_layers * self.layer_params()
         return embed + head + body

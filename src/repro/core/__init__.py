@@ -18,8 +18,10 @@ from repro.core.bucketing import (
     ShardLayout,
     TILE,
     all_gather_shards,
+    bucket_ready_order,
     comm_plan_key,
     get_comm_plan,
+    overlap_boundaries,
     pack_bucket,
     plan_buckets,
     plan_cache_clear,
@@ -41,8 +43,9 @@ from repro.core.vci import POLICIES, VCI, VCIPool
 
 __all__ = [
     "Bucket", "BucketPlan", "CommPlan", "ShardLayout", "TILE",
-    "all_gather_shards", "comm_plan_key",
-    "get_comm_plan", "pack_bucket", "plan_buckets", "plan_cache_clear",
+    "all_gather_shards", "bucket_ready_order", "comm_plan_key",
+    "get_comm_plan", "overlap_boundaries",
+    "pack_bucket", "plan_buckets", "plan_cache_clear",
     "plan_cache_stats", "reduce_gradients", "unpack_bucket", "CommRuntime",
     "Request", "CommContext", "CommWorld", "PROGRESS_MODES", "ProgressEngine",
     "after", "fresh_token", "join_tokens", "token_after", "POLICIES", "VCI",

@@ -62,6 +62,25 @@ output         "tree" | "shards"        "tree" (default) returns the reduced
                                         params* instead (see
                                         ``repro.optim.adamw``), so gradient
                                         wire bytes are actually halved.
+schedule       "post" | "overlap"       WHEN each bucket's reduce is issued.
+                                        "post" (default) reduces after the
+                                        full backward (one post-pass over the
+                                        finished gradient tree). "overlap"
+                                        wraps every bucket in a ``custom_vjp``
+                                        boundary (:func:`overlap_boundaries`)
+                                        so its reduce is issued on its VCI
+                                        stream *inside the backward*, as soon
+                                        as the bucket's cotangents exist —
+                                        PyTorch-DDP bucket-ready hooks. Same
+                                        wire bytes, shorter critical path:
+                                        reduction becomes an event-driven
+                                        consumer of the backward. Overlap
+                                        plans partition leaves CONTIGUOUSLY
+                                        in use order (``partition="contig"``)
+                                        so buckets become ready progressively
+                                        during the backward, and
+                                        :func:`bucket_ready_order` gives the
+                                        reverse-topological issue order.
 =============  =======================  =====================================
 
 ``CommRuntime`` (and its ``ProgressEngine`` ordering tokens) is the ONLY
@@ -213,8 +232,19 @@ class ShardLayout:
 
 
 def plan_buckets(tree, num_buckets: int, *, align: int = TILE,
-                 slot_align: Optional[int] = None) -> BucketPlan:
-    """Greedy size-balanced partition of a pytree's leaves into buckets.
+                 slot_align: Optional[int] = None,
+                 partition: str = "size") -> BucketPlan:
+    """Partition a pytree's leaves into buckets.
+
+    ``partition="size"`` (default) is the greedy size-balanced assignment:
+    best load balance across streams, but every bucket mixes leaves from all
+    over the tree, so under overlap scheduling no bucket is ready until the
+    backward is nearly done. ``partition="contig"`` keeps leaves CONTIGUOUS
+    in flatten (= forward use) order with size-balanced split points — the
+    PyTorch-DDP bucket shape: the bucket holding the last-used leaves has
+    all its cotangents early in the backward and its reduce can issue while
+    earlier layers are still differentiating (see
+    :func:`bucket_ready_order`).
 
     ``slot_align`` additionally places every leaf at an aligned offset
     *inside* its bucket buffer (zero-gap padding between slots) — the
@@ -223,16 +253,30 @@ def plan_buckets(tree, num_buckets: int, *, align: int = TILE,
     """
     if slot_align is not None:
         assert align % slot_align == 0, (align, slot_align)
+    if partition not in ("size", "contig"):
+        raise ValueError(f"unknown partition {partition!r}")
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     sizes = [int(np.prod(l.shape)) if l.shape else 1 for l in leaves]
-    order = sorted(range(len(leaves)), key=lambda i: -sizes[i])
     num_buckets = max(1, min(num_buckets, len(leaves)))
-    loads = [0] * num_buckets
     members: List[List[int]] = [[] for _ in range(num_buckets)]
-    for i in order:
-        b = loads.index(min(loads))
-        members[b].append(i)
-        loads[b] += sizes[i]
+    if partition == "size":
+        order = sorted(range(len(leaves)), key=lambda i: -sizes[i])
+        loads = [0] * num_buckets
+        for i in order:
+            b = loads.index(min(loads))
+            members[b].append(i)
+            loads[b] += sizes[i]
+    else:  # contig: balanced prefix splits of the use-ordered leaf sequence
+        total = sum(sizes)
+        b, load = 0, 0
+        for i in range(len(leaves)):
+            left = len(leaves) - i  # leaves not yet placed (including i)
+            if (b < num_buckets - 1 and members[b]
+                    and (load >= total * (b + 1) / num_buckets
+                         or left <= num_buckets - 1 - b)):
+                b += 1
+            members[b].append(i)
+            load += sizes[i]
     buckets = []
     for bid, idxs in enumerate(members):
         idxs = sorted(idxs)
@@ -244,6 +288,35 @@ def plan_buckets(tree, num_buckets: int, *, align: int = TILE,
             off += sizes[i]
         buckets.append(Bucket(bid, tuple(slots), _round_up(max(off, 1), align)))
     return BucketPlan(treedef, tuple(buckets), align, slot_align)
+
+
+def bucket_ready_order(plan: BucketPlan,
+                       leaf_use_order: Optional[Sequence[int]] = None
+                       ) -> Tuple[int, ...]:
+    """Reverse-topological bucket order: buckets sorted by backward readiness.
+
+    The backward pass produces cotangents in REVERSE forward-use order, so a
+    bucket has all its cotangents once its *earliest-used* leaf has been
+    differentiated. ``leaf_use_order`` lists leaf indices in forward use
+    order (default: flatten order, which is how ``init_params`` trees are
+    consumed). Buckets whose earliest leaf is used LATE in the forward are
+    ready FIRST in the backward — they lead this order, so their reduces
+    (and, for ZeRO-1, their param gathers) should be issued first.
+    """
+    if leaf_use_order is None:
+        use = list(range(plan.num_leaves))
+    else:
+        if sorted(leaf_use_order) != list(range(plan.num_leaves)):
+            raise ValueError("leaf_use_order must be a permutation of "
+                             f"range({plan.num_leaves})")
+        use = [0] * plan.num_leaves
+        for pos, idx in enumerate(leaf_use_order):
+            use[idx] = pos
+    def earliest_use(b: Bucket) -> int:
+        return min(use[s.index] for s in b.slots)
+    return tuple(sorted(range(plan.num_buckets),
+                        key=lambda bid: (-earliest_use(plan.buckets[bid]),
+                                         bid)))
 
 
 # ---------------------------------------------------------------------------
@@ -299,7 +372,10 @@ class CommPlan:
 
     def __init__(self, plan: BucketPlan, *, num_vcis: int = 8,
                  vci_policy: str = "fcfs", progress: str = "hybrid",
-                 join_every: int = 8, token_impl: str = "barrier"):
+                 join_every: int = 8, token_impl: str = "barrier",
+                 schedule: str = "post"):
+        if schedule not in ("post", "overlap"):
+            raise ValueError(f"unknown schedule {schedule!r}")
         self.plan = plan
         self.world = CommWorld(num_vcis=num_vcis, policy=vci_policy)
         self.contexts: Tuple[CommContext, ...] = tuple(
@@ -308,7 +384,16 @@ class CommPlan:
         self.progress = progress
         self.join_every = join_every
         self.token_impl = token_impl
+        self.schedule = schedule
         self._tables = None
+        self._ready_order: Optional[Tuple[int, ...]] = None
+
+    @property
+    def ready_order(self) -> Tuple[int, ...]:
+        """Bucket issue order for overlap scheduling (backward readiness)."""
+        if self._ready_order is None:
+            self._ready_order = bucket_ready_order(self.plan)
+        return self._ready_order
 
     def runtime(self) -> CommRuntime:
         """A fresh per-trace runtime bound to the cached world/contexts."""
@@ -366,18 +451,20 @@ _PLAN_CACHE_STATS = {"hits": 0, "misses": 0, "builds": 0}
 
 def comm_plan_key(grads, *, num_streams: int, align: int,
                   slot_align: Optional[int], num_vcis: int, vci_policy: str,
-                  progress: str, join_every: int, token_impl: str):
+                  progress: str, join_every: int, token_impl: str,
+                  schedule: str = "post"):
     """Hashable cache key: tree structure + leaf shapes/dtypes + knobs."""
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     shapes = tuple((tuple(l.shape), jnp.dtype(l.dtype).name) for l in leaves)
     return (treedef, shapes, num_streams, align, slot_align, num_vcis,
-            vci_policy, progress, join_every, token_impl)
+            vci_policy, progress, join_every, token_impl, schedule)
 
 
 def get_comm_plan(grads, *, num_streams: int = 8, align: int = TILE,
                   pack: str = "xla", num_vcis: int = 8,
                   vci_policy: str = "fcfs", progress: str = "hybrid",
                   join_every: int = 8, token_impl: str = "barrier",
+                  schedule: str = "post",
                   persistent: bool = True) -> CommPlan:
     """Build (or fetch) the CommPlan for a gradient pytree.
 
@@ -385,22 +472,30 @@ def get_comm_plan(grads, *, num_streams: int = 8, align: int = TILE,
     repeated eager ``train_step`` calls and jit retraces pay the Python
     plan/world construction exactly once. ``persistent=False`` rebuilds
     from scratch every call — the seed behaviour, kept for the ablation.
+
+    ``schedule="overlap"`` keys a separate plan whose buckets are
+    CONTIGUOUS in leaf-use order (``partition="contig"``) so they become
+    ready progressively during the backward — the layout
+    :func:`overlap_boundaries` consumes.
     """
     slot_align = align if pack == "pallas" else None
     key = comm_plan_key(grads, num_streams=num_streams, align=align,
                         slot_align=slot_align, num_vcis=num_vcis,
                         vci_policy=vci_policy, progress=progress,
-                        join_every=join_every, token_impl=token_impl)
+                        join_every=join_every, token_impl=token_impl,
+                        schedule=schedule)
     if persistent:
         cached = _PLAN_CACHE.get(key)
         if cached is not None:
             _PLAN_CACHE_STATS["hits"] += 1
             return cached
         _PLAN_CACHE_STATS["misses"] += 1
-    plan = plan_buckets(grads, num_streams, align=align, slot_align=slot_align)
+    partition = "contig" if schedule == "overlap" else "size"
+    plan = plan_buckets(grads, num_streams, align=align,
+                        slot_align=slot_align, partition=partition)
     cp = CommPlan(plan, num_vcis=num_vcis, vci_policy=vci_policy,
                   progress=progress, join_every=join_every,
-                  token_impl=token_impl)
+                  token_impl=token_impl, schedule=schedule)
     _PLAN_CACHE_STATS["builds"] += 1
     if persistent:
         _PLAN_CACHE[key] = cp
@@ -534,16 +629,8 @@ def reduce_gradients(
             shards.append(shard / n if mean else shard)
         return shards, layout
 
-    def reduce_one(p, ctx, padded: int):
-        if reduction == "reduce_scatter" and padded % n == 0:
-            shard = rt.reduce_scatter(p, ctx, axis=axis)
-            if mean:
-                shard = shard / n
-            return rt.all_gather(shard, ctx, axis=axis)
-        r = rt.all_reduce(p, ctx, axis=axis)
-        return r / n if mean else r
-
-    reduced = [reduce_one(p, ctx, b.padded_size)
+    reduced = [_reduce_flat(rt, ctx, p, axis=axis, n=n, mean=mean,
+                            reduction=reduction, padded=b.padded_size)
                for p, ctx, b in zip(packed, contexts, bplan.buckets)]
 
     # ---- unpack ------------------------------------------------------------
@@ -581,9 +668,173 @@ def _axis_size(axis) -> int:
     return axis_size(axis)
 
 
+# ---------------------------------------------------------------------------
+# bucket-ready overlap scheduling (schedule="overlap")
+# ---------------------------------------------------------------------------
+
+def _reduce_flat(rt: CommRuntime, ctx, flat, *, axis, n: int, mean: bool,
+                 reduction: str, padded: int):
+    """One bucket buffer's reduction: reduce_scatter + all_gather when the
+    bucket divides the axis, else all_reduce. SHARED by the post-pass
+    (``reduce_gradients``) and the overlap boundaries, so the two schedules
+    stay op-for-op identical by construction."""
+    if reduction == "reduce_scatter" and padded % n == 0:
+        shard = rt.reduce_scatter(flat, ctx, axis=axis)
+        if mean:
+            shard = shard / n
+        return rt.all_gather(shard, ctx, axis=axis)
+    r = rt.all_reduce(flat, ctx, axis=axis)
+    return r / n if mean else r
+
+
+def _bucket_boundary(cp: CommPlan, bucket: Bucket, ctx, *, axis, n: int,
+                     mean: bool, pack: str, reduction: str, reduce_dtype,
+                     accum_steps: int, shards_mode: bool):
+    """A ``custom_vjp`` identity over one bucket's leaves whose BACKWARD
+    issues that bucket's reduction on its VCI stream.
+
+    Forward: ``boundary(leaves, tap, carry) -> leaves`` (identity; ``tap``
+    and ``carry`` do not touch the forward values). Backward: the incoming
+    cotangents ARE the bucket's gradients, available the moment AD reaches
+    this bucket's leaves — reverse-topologically *before* earlier layers
+    finish differentiating — so the pack + reduce emitted here carries a
+    data dependency on this bucket alone and XLA may run it concurrently
+    with the rest of the backward. Each boundary mints a FRESH runtime:
+    per-bucket (per-stream) ordering is exactly what makes early issue
+    legal (MPIX-stream semantics); cross-stream joins would re-serialize
+    the very overlap being created.
+
+    ``carry`` (microbatch accumulation) holds the mean-scaled gradient sum
+    of all earlier microbatches; the backward folds the final microbatch in
+    with the same ``carry + ct/accum_steps`` arithmetic the post-schedule
+    scan uses, so numerics match bit-for-bit. ``tap`` is only used in
+    ``shards_mode``: the reduce_scatter shard leaves the backward as the
+    tap's "gradient" (the ZeRO-1 side channel — cotangent shapes must match
+    their primals, so the 1/N shard cannot ride out on the params).
+
+    ``pack="pallas"`` here means the SLOT-ALIGNED LAYOUT with per-slot DUS
+    writes on every backend — the boundary never dispatches the fused
+    ``bucket_pack_pallas`` tile-gather kernel, even on TPU, because the
+    kernel's tables index one global arena spanning ALL leaves while a
+    boundary sees only its own bucket's cotangents. Per-bucket tile tables
+    would lift this (ROADMAP); until then overlap-on-TPU pays the DUS
+    lowering where the post schedule pays the fused kernel.
+    """
+    pack_dma = pack == "pallas"
+
+    def _total(carry, cts):
+        if carry is None:
+            return list(cts)
+        return [(c + ct.astype(jnp.float32) / accum_steps).astype(s.dtype)
+                for c, ct, s in zip(carry, cts, bucket.slots)]
+
+    def _pack(vals):
+        full: List[Optional[jax.Array]] = \
+            [None] * (max(s.index for s in bucket.slots) + 1)
+        for s, v in zip(bucket.slots, vals):
+            full[s.index] = v
+        if pack_dma:
+            return _pack_bucket_dma(full, bucket, reduce_dtype)
+        return pack_bucket(full, bucket, dtype=reduce_dtype)
+
+    @jax.custom_vjp
+    def boundary(leaves, tap, carry):
+        return leaves
+
+    def fwd(leaves, tap, carry):
+        return leaves, carry
+
+    def bwd(carry, cts):
+        rt = cp.runtime()
+        flat = _pack(_total(carry, cts))
+        carry_ct = None if carry is None else \
+            tuple(jnp.zeros_like(c) for c in carry)
+        if shards_mode:
+            shard = rt.reduce_scatter(flat, ctx, axis=axis) \
+                .astype(jnp.float32)
+            if mean:
+                shard = shard / n
+            zero_cts = tuple(jnp.zeros(s.shape, s.dtype)
+                             for s in bucket.slots)
+            return zero_cts, shard, carry_ct
+        reduced = _reduce_flat(rt, ctx, flat, axis=axis, n=n, mean=mean,
+                               reduction=reduction, padded=bucket.padded_size)
+        by_index = dict(unpack_bucket(reduced, bucket))
+        return (tuple(by_index[s.index] for s in bucket.slots), None,
+                carry_ct)
+
+    boundary.defvjp(fwd, bwd)
+    return boundary
+
+
+def overlap_boundaries(
+    cp: CommPlan,
+    params,
+    *,
+    axis,
+    taps: Optional[Sequence[jax.Array]] = None,
+    carry=None,
+    accum_steps: int = 1,
+    mean: bool = True,
+    pack: str = "xla",
+    reduction: str = "all_reduce",
+    reduce_dtype=jnp.float32,
+):
+    """Wrap ``params`` so every bucket's gradient reduce is issued INSIDE
+    the backward, on the bucket's dedicated VCI stream, as soon as its
+    cotangents exist (bucket-ready hooks, PyTorch-DDP style).
+
+    Returns the wrapped parameter tree (forward values are unchanged).
+    Differentiating a loss of the wrapped tree w.r.t. ``params`` yields the
+    *already-reduced* mean gradients — ``reduce_gradients`` must NOT run
+    again. With ``taps`` (ZeRO-1 mode: one zero-initialized f32 array of
+    shard size per bucket, see :class:`ShardLayout`), the params' gradients
+    are zeros and each tap's gradient is instead this rank's mean-reduced
+    ``reduce_scatter`` shard of its bucket (``reduce_dtype`` = wire dtype),
+    exactly what ``reduce_gradients(..., output="shards")`` returns post-hoc.
+
+    ``carry`` threads microbatch accumulation through the boundary: pass
+    the mean-scaled gradient sum of all *earlier* microbatches (a tree like
+    ``params``) plus ``accum_steps``, and differentiate only the LAST
+    microbatch's loss — the backward folds the carry in before reducing, so
+    one set of reduces per step, not per microbatch.
+    """
+    bplan = cp.plan
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    if treedef != bplan.treedef:
+        raise ValueError("params tree does not match the CommPlan's tree")
+    shards_mode = taps is not None
+    if shards_mode:
+        if len(taps) != bplan.num_buckets:
+            raise ValueError(f"need one tap per bucket "
+                             f"({bplan.num_buckets}), got {len(taps)}")
+    carry_leaves = None
+    if carry is not None:
+        carry_leaves = treedef.flatten_up_to(carry)
+    n = _axis_size(axis)
+    if shards_mode:
+        ShardLayout(bplan, n)  # raises on indivisible buckets
+    out: List[Optional[jax.Array]] = [None] * len(leaves)
+    for b in bplan.buckets:
+        boundary = _bucket_boundary(
+            cp, b, cp.contexts[b.bid], axis=axis, n=n, mean=mean, pack=pack,
+            reduction=reduction, reduce_dtype=reduce_dtype,
+            accum_steps=accum_steps, shards_mode=shards_mode)
+        b_leaves = tuple(leaves[s.index] for s in b.slots)
+        b_carry = None if carry_leaves is None else \
+            tuple(carry_leaves[s.index] for s in b.slots)
+        tap = taps[b.bid] if shards_mode else None
+        wrapped = boundary(b_leaves, tap, b_carry)
+        for s, w in zip(b.slots, wrapped):
+            out[s.index] = w
+    assert all(v is not None for v in out)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def all_gather_shards(rt: CommRuntime, shards: Sequence[jax.Array],
                       plan: Union[BucketPlan, CommPlan], *, axis,
-                      contexts=None, wire_dtype=None):
+                      contexts=None, wire_dtype=None,
+                      order: Optional[Sequence[int]] = None):
     """Rebuild the full pytree from per-rank bucket shards (ZeRO-1 step 3).
 
     The inverse of ``reduce_gradients(..., output="shards")`` composed with
@@ -592,7 +843,10 @@ def all_gather_shards(rt: CommRuntime, shards: Sequence[jax.Array],
     re-assembling the ``padded_size`` buffer, which is then unpacked into
     leaves (cast to each LeafSlot's dtype). ``wire_dtype`` sets the gather
     payload dtype — param-dtype wire (e.g. bf16) halves the gather bytes
-    and is lossless when every leaf shares that dtype.
+    and is lossless when every leaf shares that dtype. ``order`` sets the
+    per-bucket ISSUE order (default: bucket id); the overlap trainer passes
+    ``CommPlan.ready_order`` so first-ready buckets' gathers chain first on
+    their streams and pipeline behind later buckets' reduces.
     """
     comm_plan = plan if isinstance(plan, CommPlan) else None
     bplan: BucketPlan = comm_plan.plan if comm_plan is not None else plan
@@ -601,8 +855,11 @@ def all_gather_shards(rt: CommRuntime, shards: Sequence[jax.Array],
             contexts = comm_plan.contexts
         else:
             contexts = [rt.world.create(kind="p2p") for _ in bplan.buckets]
+    if order is None:
+        order = range(bplan.num_buckets)
     out_leaves: List[Optional[jax.Array]] = [None] * bplan.num_leaves
-    for shard, ctx, b in zip(shards, contexts, bplan.buckets):
+    for bid in order:
+        shard, ctx, b = shards[bid], contexts[bid], bplan.buckets[bid]
         if wire_dtype is not None:
             shard = shard.astype(wire_dtype)
         flat = rt.all_gather(shard, ctx, axis=axis)

@@ -23,7 +23,6 @@ from functools import partial
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
-import jax.numpy as jnp
 from jax import lax
 
 from repro.core.comm import CommContext, CommWorld

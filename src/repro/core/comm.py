@@ -29,7 +29,7 @@ Matching semantics preserved from the standard (§2.1):
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.core.vci import VCI, VCIPool

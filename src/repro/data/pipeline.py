@@ -14,7 +14,6 @@ callbacks via ``jax.make_array_from_callback``, the multi-host-safe path
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Dict, Iterator, Optional
 
 import jax

@@ -68,7 +68,7 @@ def zero1_opt_specs(mesh, opt_state):
     ``jax.eval_shape`` structs alike.
     """
     dp = batch_axes(mesh)
-    dpe = _dp_entry(dp)
+    dpe = dp_entry(dp)
     return jax.tree_util.tree_map(
         lambda l: P(dpe) if getattr(l, "ndim", 0) == 1 else P(), opt_state)
 
@@ -83,8 +83,13 @@ def _axis_size(mesh, ax: AxisLike) -> int:
     return n
 
 
-def _dp_entry(dp: Tuple[str, ...]) -> AxisLike:
+def dp_entry(dp: Tuple[str, ...]) -> AxisLike:
+    """A PartitionSpec entry sharding one dim over ALL the data axes: the
+    bare axis name for a 1-axis mesh, the tuple for data x pod meshes.
+    Shared by the ZeRO-1 opt-state specs, the trainer's decay-mask specs,
+    and the overlap scheduler's shard taps."""
     return dp[0] if len(dp) == 1 else tuple(dp)
+
 
 
 # ---------------------------------------------------------------------------
@@ -123,36 +128,36 @@ def _leaf_spec(mesh, keys: Sequence[str], shape: Tuple[int, ...], *,
         # (mixtral 8 on 16 — the FSDP fallback lands on d_model below).
         e_dim = lead
         if dpn > 1 and shape[e_dim] % dpn == 0:
-            spec[e_dim] = _dp_entry(dp)
+            spec[e_dim] = dp_entry(dp)
         ff_dim = nd - 1 if name in ("w_gate", "w_up") else nd - 2
         if model_ok(ff_dim):
             spec[ff_dim] = "model"
         elif spec[e_dim] is None:
             d_dim = nd - 2 if name in ("w_gate", "w_up") else nd - 1
             if dp_ok(d_dim):
-                spec[d_dim] = _dp_entry(dp)
+                spec[d_dim] = dp_entry(dp)
     elif name == "router":
         pass  # tiny, replicated
     elif parent == "embed" and nd >= 2:           # (V, d) or (K, V, d)
         if model_ok(nd - 2):
             spec[nd - 2] = "model"                # vocab column-parallel
         if dp_ok(nd - 1):
-            spec[nd - 1] = _dp_entry(dp)
+            spec[nd - 1] = dp_entry(dp)
     elif parent in ("lm_head", "img_proj") and nd >= 2:
         if model_ok(nd - 1):
             spec[nd - 1] = "model"
         if dp_ok(nd - 2):
-            spec[nd - 2] = _dp_entry(dp)
+            spec[nd - 2] = dp_entry(dp)
     elif name in _TP_COL and nd >= 2:
         if model_ok(nd - 1):
             spec[nd - 1] = "model"
         if dp_ok(nd - 2):
-            spec[nd - 2] = _dp_entry(dp)
+            spec[nd - 2] = dp_entry(dp)
     elif name in _TP_ROW and nd >= 2:
         if model_ok(nd - 2):
             spec[nd - 2] = "model"
         if dp_ok(nd - 1):
-            spec[nd - 1] = _dp_entry(dp)
+            spec[nd - 1] = dp_entry(dp)
     elif name in _TP_BIAS:
         if model_ok(nd - 1):
             spec[nd - 1] = "model"
@@ -214,7 +219,7 @@ class Sharder:
             x, NamedSharding(self.mesh, P(*clean)))
 
     def _batch(self, n: int) -> AxisLike:
-        return _dp_entry(self.dp) if self.div(n, tuple(self.dp)) else None
+        return dp_entry(self.dp) if self.div(n, tuple(self.dp)) else None
 
     # -- named activation sites ------------------------------------------
     def hidden(self, x):

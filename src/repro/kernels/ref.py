@@ -7,7 +7,7 @@ assert against (``interpret=True`` execution of the kernels on CPU).
 from __future__ import annotations
 
 import math
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

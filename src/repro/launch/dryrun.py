@@ -29,7 +29,6 @@ import traceback
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, config_for_shape
 from repro.launch import inputs as I
@@ -97,7 +96,6 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
         state_sh = I.train_state_shardings(cfg, mesh)
         batch_struct, batch_sh = I.batch_struct_and_shardings(cfg, shape, mesh)
         step = make_train_step(cfg, mesh=mesh, comm="gspmd")
-        rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
         jitted = jax.jit(
             step,
             in_shardings=(state_sh, batch_sh),

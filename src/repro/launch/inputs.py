@@ -7,8 +7,6 @@ and compiles against these stand-ins.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,7 +14,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.data.pipeline import batch_spec
-from repro.dist.sharding import batch_axes, data_axes, param_specs
+from repro.dist.sharding import data_axes, param_specs
 from repro.models.transformer import init_cache, init_params
 from repro.optim.adamw import AdamWState
 from repro.train.trainer import TrainState

@@ -26,10 +26,9 @@ Sources:
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
-import numpy as np
 
 from repro.configs.base import InputShape, ModelConfig
 

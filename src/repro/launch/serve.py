@@ -18,7 +18,7 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import ARCH_IDS, get_config
+from repro.configs import get_config
 from repro.models.transformer import init_params
 from repro.serve.comm import ServeCommPlan
 from repro.serve.engine import Request, ServeEngine

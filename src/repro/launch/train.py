@@ -12,12 +12,9 @@ reduction; ``--comm gspmd`` is the XLA-native baseline.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.io import latest_step, load_checkpoint, save_checkpoint
@@ -65,6 +62,11 @@ def main() -> None:
     ap.add_argument("--zero1-wire", default=None,
                     help="wire dtype for zero1 grad-scatter/param-gather "
                          "(e.g. bfloat16); default f32")
+    ap.add_argument("--overlap", action="store_true",
+                    help="bucket-ready overlap scheduling (vci mode only): "
+                         "issue each bucket's reduce inside the backward on "
+                         "its VCI stream as soon as its grads exist, instead "
+                         "of one post-backward reduction pass")
     ap.add_argument("--per-step-plan", action="store_true",
                     help="rebuild the comm plan every trace (seed behaviour; "
                          "default uses the persistent CommPlan cache)")
@@ -82,6 +84,7 @@ def main() -> None:
     lr_fn = lambda s: cosine_schedule(s, peak=args.lr,
                                       warmup_steps=args.warmup,
                                       total_steps=args.steps)
+    schedule = "overlap" if args.overlap else "post"
     step_fn = make_train_step(
         cfg, mesh=mesh, lr_fn=lr_fn, comm=args.comm, accum_steps=args.accum,
         num_streams=args.num_streams, progress=args.progress,
@@ -89,12 +92,14 @@ def main() -> None:
         pack=args.pack, reduction=args.reduction,
         persistent_plan=not args.per_step_plan,
         optimizer=args.optimizer, zero1_wire_dtype=args.zero1_wire,
+        schedule=schedule,
         token_impl="data" if jax.default_backend() == "cpu" else "barrier")
     step = jax.jit(step_fn)
 
     state = train_state_init(
         cfg, jax.random.PRNGKey(args.seed), optimizer=args.optimizer,
-        mesh=mesh, num_streams=args.num_streams, pack=args.pack)
+        mesh=mesh, num_streams=args.num_streams, pack=args.pack,
+        schedule=schedule)
     start = 0
     if args.ckpt_dir and (ls := latest_step(args.ckpt_dir)) is not None:
         state = load_checkpoint(args.ckpt_dir, ls, state)

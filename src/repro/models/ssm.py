@@ -18,7 +18,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, SSMConfig
+from repro.configs.base import ModelConfig
 from repro.models.layers import rms_norm
 
 

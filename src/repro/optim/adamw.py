@@ -160,6 +160,42 @@ def sharded_adamw_init(params, plan: BucketPlan,
                              count=jnp.zeros((), jnp.int32))
 
 
+def sharded_adamw_bucket_update(
+    g: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    master: jax.Array,
+    decay_mask: jax.Array,
+    *,
+    lr: jax.Array,
+    count: jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """AdamW on ONE bucket's owned shard: the bucket-granular entry point.
+
+    ``g`` must already be mean-reduced AND clip-scaled (the global-norm
+    scale is the only cross-bucket coupling in the update); ``count`` is
+    the already-incremented step count. Returns ``(new_master, new_m,
+    new_v)``. The whole-layout :func:`sharded_adamw_update` is a loop over
+    this; the overlap trainer calls the loop with ``bucket_order =
+    CommPlan.ready_order``. Note the clip scale makes every update
+    data-dependent on the LAST scatter when ``max_grad_norm`` is set —
+    only with clipping disabled is bucket ``b``'s update dependent on
+    shard ``b`` alone, letting its param all_gather pipeline behind later
+    buckets' still-running reduces.
+    """
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+    wd = decay_mask.astype(jnp.float32)
+    mf = m.astype(jnp.float32) * b1 + g * (1 - b1)
+    vf = v.astype(jnp.float32) * b2 + jnp.square(g) * (1 - b2)
+    step = (mf / c1) / (jnp.sqrt(vf / c2) + eps) + weight_decay * wd * master
+    return master - lr * step, mf.astype(m.dtype), vf.astype(v.dtype)
+
+
 def sharded_adamw_update(
     grad_shards: Sequence[jax.Array],
     state: ShardedAdamWState,
@@ -173,6 +209,7 @@ def sharded_adamw_update(
     eps: float = 1e-8,
     weight_decay: float = 0.1,
     max_grad_norm: Optional[float] = 1.0,
+    bucket_order: Optional[Sequence[int]] = None,
 ) -> Tuple[Tuple[jax.Array, ...], ShardedAdamWState, dict]:
     """Apply AdamW to the LOCAL shard of every bucket.
 
@@ -185,6 +222,11 @@ def sharded_adamw_update(
     scalar across ranks (the cross-shard half of global-norm clipping).
     Returns the updated fp32 param shards (for the trainer's per-bucket
     all_gather), the new state, and ``{"grad_norm": ...}``.
+
+    ``bucket_order`` sets the per-bucket ISSUE order (default: bucket id).
+    Results stay indexed by bucket id either way — each bucket's update is
+    elementwise in its own shard, so order changes scheduling freedom, not
+    values. Overlap trainers pass ``CommPlan.ready_order``.
     """
     if psum is None:
         psum = lambda x: x
@@ -207,19 +249,17 @@ def sharded_adamw_update(
         grads = [g * scale for g in grads]
 
     count = state.count + 1
-    c1 = 1.0 - b1 ** count.astype(jnp.float32)
-    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+    if bucket_order is None:
+        bucket_order = range(len(grads))
 
-    new_m, new_v, new_master = [], [], []
-    for bid, g in enumerate(grads):
-        m, v, p = state.m[bid], state.v[bid], state.master[bid]
-        wd = decay_masks[bid].astype(jnp.float32)
-        mf = m.astype(jnp.float32) * b1 + g * (1 - b1)
-        vf = v.astype(jnp.float32) * b2 + jnp.square(g) * (1 - b2)
-        step = (mf / c1) / (jnp.sqrt(vf / c2) + eps) + weight_decay * wd * p
-        new_master.append(p - lr * step)
-        new_m.append(mf.astype(m.dtype))
-        new_v.append(vf.astype(v.dtype))
+    new_m: list = [None] * len(grads)
+    new_v: list = [None] * len(grads)
+    new_master: list = [None] * len(grads)
+    for bid in bucket_order:
+        new_master[bid], new_m[bid], new_v[bid] = sharded_adamw_bucket_update(
+            grads[bid], state.m[bid], state.v[bid], state.master[bid],
+            decay_masks[bid], lr=lr, count=count, b1=b1, b2=b2, eps=eps,
+            weight_decay=weight_decay)
     new_state = ShardedAdamWState(tuple(new_m), tuple(new_v),
                                   tuple(new_master), count)
     return tuple(new_master), new_state, {"grad_norm": gnorm}

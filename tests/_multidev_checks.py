@@ -212,6 +212,61 @@ def check_zero1_matches_replicated():
                 err_msg=f"{arch} param {jax.tree_util.keystr(pa)}")
 
 
+def check_overlap_matches_post():
+    """Bucket-ready overlap scheduling conformance: 5 train steps with
+    ``schedule="overlap"`` (each bucket's reduce issued inside the backward
+    via its custom_vjp boundary) must match ``schedule="post"`` (one
+    post-backward reduction pass) to fp32 tolerance on the 8-device mesh,
+    for a dense config (gemma) AND an MoE config (mixtral), for BOTH
+    ``optimizer="replicated"`` and ``"zero1"``, including microbatch
+    accumulation (the dense configs run accum_steps=2: only the last
+    microbatch's backward carries the boundaries, earlier microbatches ride
+    in as the carry)."""
+    from repro.configs import get_config
+    from repro.data.pipeline import synthetic_batch
+    from repro.train.trainer import make_train_step, train_state_init
+
+    mesh = _mesh1d()
+    n = mesh.size
+    for arch in ("gemma-2b-smoke", "mixtral-8x22b-smoke"):
+        cfg = get_config(arch)
+        accum = 2 if arch.startswith("gemma") else 1
+        for optimizer in ("replicated", "zero1"):
+            knobs = dict(mesh=mesh, comm="vci", num_streams=4, num_vcis=4,
+                         token_impl="data", accum_steps=accum,
+                         optimizer=optimizer)
+            states, steps = {}, {}
+            for sched in ("post", "overlap"):
+                steps[sched] = make_train_step(cfg, schedule=sched, **knobs)
+                states[sched] = train_state_init(
+                    cfg, jax.random.PRNGKey(0), optimizer=optimizer,
+                    mesh=mesh, num_streams=4, schedule=sched)
+            with set_mesh(mesh):
+                jits = {s: jax.jit(f) for s, f in steps.items()}
+                for i in range(5):
+                    batch = synthetic_batch(cfg, 2 * n, 32, seed=i)
+                    metrics = {}
+                    for sched in ("post", "overlap"):
+                        states[sched], metrics[sched] = jits[sched](
+                            states[sched], batch)
+                    for k in ("loss", "grad_norm"):
+                        np.testing.assert_allclose(
+                            float(metrics["overlap"][k]),
+                            float(metrics["post"][k]), rtol=1e-5,
+                            err_msg=f"{arch} {optimizer} step {i} "
+                                    f"metric {k}")
+            for (pa, a), (pb, b) in zip(
+                    jax.tree_util.tree_leaves_with_path(
+                        states["overlap"].params),
+                    jax.tree_util.tree_leaves_with_path(
+                        states["post"].params)):
+                np.testing.assert_allclose(
+                    np.asarray(a, np.float32), np.asarray(b, np.float32),
+                    rtol=2e-5, atol=1e-6,
+                    err_msg=f"{arch} {optimizer} param "
+                            f"{jax.tree_util.keystr(pa)}")
+
+
 def check_vci_train_step_matches_gspmd():
     """comm='vci' (paper mode) and comm='gspmd' produce the same update."""
     from repro.configs import get_config

@@ -204,6 +204,83 @@ class TestPlanCache:
         assert len(pack_tables) == cp.plan.num_buckets
 
 
+class TestPlanCacheTrainStep:
+    """CommPlan cache behaviour through the REAL train_step, for both
+    comm schedules: repeated (eager, hence re-traced) steps HIT the cache;
+    a knob change (num_streams), a schedule change, and a shape change
+    (different arch => different grad shapes) each MISS and build anew."""
+
+    def setup_method(self):
+        plan_cache_clear()
+
+    def teardown_method(self):
+        plan_cache_clear()
+
+    @staticmethod
+    def _step_and_state(cfg, mesh, *, schedule, num_streams=2):
+        from repro.train.trainer import make_train_step, train_state_init
+
+        step = make_train_step(cfg, mesh=mesh, comm="vci",
+                               num_streams=num_streams, num_vcis=2,
+                               token_impl="data", schedule=schedule)
+        state = train_state_init(cfg, jax.random.PRNGKey(0), mesh=mesh,
+                                 num_streams=num_streams, schedule=schedule)
+        return step, state
+
+    @pytest.mark.parametrize("schedule", ["post", "overlap"])
+    def test_repeated_steps_hit_then_knob_and_shape_miss(self, schedule):
+        from repro.compat import set_mesh
+        from repro.configs import get_config
+        from repro.data.pipeline import synthetic_batch
+
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        cfg = get_config("olmo-1b-smoke")
+        step, state = self._step_and_state(cfg, mesh, schedule=schedule)
+        plan_cache_clear()
+        with set_mesh(mesh):
+            # eager (unjitted) calls re-trace every step: each trace asks
+            # for the plan again, so steps 2..3 must hit the cache.
+            for i in range(3):
+                state, _ = step(state, synthetic_batch(cfg, 2, 16, seed=i))
+        s = plan_cache_stats()
+        assert s["misses"] == 1 and s["builds"] == 1, s
+        assert s["hits"] == 2 and s["size"] == 1, s
+
+        # knob change: same tree, different num_streams -> new plan
+        step3, state3 = self._step_and_state(cfg, mesh, schedule=schedule,
+                                             num_streams=3)
+        with set_mesh(mesh):
+            step3(state3, synthetic_batch(cfg, 2, 16, seed=0))
+        s = plan_cache_stats()
+        assert s["misses"] == 2 and s["size"] == 2, s
+
+        # shape change: different arch -> different grad shapes -> new plan
+        cfg2 = get_config("gemma-2b-smoke")
+        step_g, state_g = self._step_and_state(cfg2, mesh, schedule=schedule)
+        with set_mesh(mesh):
+            step_g(state_g, synthetic_batch(cfg2, 2, 16, seed=0))
+        s = plan_cache_stats()
+        assert s["misses"] == 3 and s["builds"] == 3 and s["size"] == 3, s
+
+    def test_schedules_key_separate_plans(self):
+        """post and overlap must never share a cached plan: the overlap
+        partition is contiguous-by-use-order, post is size-balanced."""
+        from repro.compat import set_mesh
+        from repro.configs import get_config
+        from repro.data.pipeline import synthetic_batch
+
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        cfg = get_config("olmo-1b-smoke")
+        batch = synthetic_batch(cfg, 2, 16, seed=0)
+        for schedule in ("post", "overlap"):
+            step, state = self._step_and_state(cfg, mesh, schedule=schedule)
+            with set_mesh(mesh):
+                step(state, batch)
+        s = plan_cache_stats()
+        assert s["misses"] == 2 and s["builds"] == 2 and s["size"] == 2, s
+        assert s["hits"] == 0, s
+
+
 class TestReducePaths:
     """Single-device mesh: the reduction is the identity (axis size 1), so
     every pack/reduction combination must reproduce the input tree."""

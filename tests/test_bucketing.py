@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 # hypothesis is optional: the unit tests below run without it, the property
 # tests skip cleanly (collection must never hard-fail on the missing dep).
@@ -15,7 +14,7 @@ except ImportError:  # pragma: no cover - optional dep absent in minimal envs
 
 from repro.core.bucketing import (
     TILE,
-    BucketPlan,
+    bucket_ready_order,
     pack_bucket,
     plan_buckets,
     unpack_bucket,
@@ -62,6 +61,73 @@ class TestPlan:
             for s in b.slots:
                 assert s.offset == off
                 off += s.size
+
+
+class TestContigPartition:
+    """The overlap layout: buckets contiguous in leaf-use (flatten) order."""
+
+    def test_buckets_are_contiguous_runs(self):
+        tree = _tree([(7,)] * 11)
+        plan = plan_buckets(tree, 4, align=1, partition="contig")
+        nxt = 0
+        for b in plan.buckets:
+            idxs = [s.index for s in b.slots]
+            assert idxs == list(range(nxt, nxt + len(idxs))), idxs
+            nxt += len(idxs)
+        assert nxt == 11
+        assert all(b.slots for b in plan.buckets)  # no empty buckets
+
+    def test_roughly_balanced(self):
+        tree = _tree([(64,)] * 8)
+        plan = plan_buckets(tree, 4, align=1, partition="contig")
+        loads = [sum(s.size for s in b.slots) for b in plan.buckets]
+        assert max(loads) == min(loads) == 128
+
+    def test_skewed_sizes_every_bucket_nonempty(self):
+        tree = _tree([(1000,), (1,), (1,), (1,), (1,)])
+        plan = plan_buckets(tree, 3, align=1, partition="contig")
+        assert plan.num_buckets == 3
+        assert all(b.slots for b in plan.buckets)
+        seen = sorted(s.index for b in plan.buckets for s in b.slots)
+        assert seen == list(range(5))
+
+    def test_unknown_partition_raises(self):
+        try:
+            plan_buckets(_tree([(4,)]), 1, partition="nope")
+        except ValueError:
+            return
+        raise AssertionError("expected ValueError")
+
+
+class TestReadyOrder:
+    def test_last_used_leaves_ready_first(self):
+        # contig partition, use order == flatten order: the bucket holding
+        # the HIGHEST leaf indices is fully differentiated first.
+        tree = _tree([(8,)] * 9)
+        plan = plan_buckets(tree, 3, align=1, partition="contig")
+        assert bucket_ready_order(plan) == (2, 1, 0)
+
+    def test_custom_use_order(self):
+        tree = _tree([(8,)] * 4)
+        plan = plan_buckets(tree, 2, align=1, partition="contig")
+        # reversed use order flips readiness: bucket 0's leaves are now the
+        # last-used (first-differentiated) ones
+        assert bucket_ready_order(plan, leaf_use_order=[3, 2, 1, 0]) == (0, 1)
+
+    def test_size_partition_ready_order_is_valid_permutation(self):
+        tree = _tree([(17,), (3,), (64,), (5,), (2, 2)])
+        plan = plan_buckets(tree, 3)
+        order = bucket_ready_order(plan)
+        assert sorted(order) == list(range(plan.num_buckets))
+
+    def test_bad_use_order_raises(self):
+        tree = _tree([(4,), (4,)])
+        plan = plan_buckets(tree, 2, align=1)
+        try:
+            bucket_ready_order(plan, leaf_use_order=[0, 0])
+        except ValueError:
+            return
+        raise AssertionError("expected ValueError")
 
 
 class TestPackUnpack:

@@ -13,7 +13,7 @@ from repro.train.trainer import train_state_init
 def test_roundtrip_train_state(tmp_path):
     cfg = get_config("olmo-1b-smoke")
     state = train_state_init(cfg, jax.random.PRNGKey(0))
-    out = save_checkpoint(str(tmp_path), 7, state, metadata={"arch": cfg.name})
+    save_checkpoint(str(tmp_path), 7, state, metadata={"arch": cfg.name})
     assert latest_step(str(tmp_path)) == 7
     restored = load_checkpoint(str(tmp_path), 7, state)
     for a, b in zip(jax.tree_util.tree_leaves(state),

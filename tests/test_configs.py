@@ -10,7 +10,6 @@ import pytest
 from repro.configs import (
     ARCH_IDS,
     INPUT_SHAPES,
-    SUBQUADRATIC_AT_500K,
     all_configs,
     config_for_shape,
     get_config,

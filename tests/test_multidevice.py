@@ -33,6 +33,13 @@ def test_bucket_fastpath_matches_pmean(multidev):
     _run(multidev, "bucket_fastpath_matches_pmean")
 
 
+def test_overlap_matches_post(multidev):
+    """schedule='overlap' (reduces issued inside the backward, bucket-ready)
+    == schedule='post' to fp32 tolerance: dense + MoE, replicated + zero1,
+    including microbatch accumulation."""
+    _run(multidev, "overlap_matches_post")
+
+
 @pytest.mark.slow
 def test_vci_train_step_matches_gspmd(multidev):
     _run(multidev, "vci_train_step_matches_gspmd")

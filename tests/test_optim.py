@@ -3,10 +3,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.optim.adamw import (
-    AdamWState,
     adamw_init,
     adamw_update,
     clip_by_global_norm,

@@ -12,7 +12,6 @@ from repro.core.progress import (
     after_data,
     fresh_token,
     join_tokens,
-    token_after,
     token_after_data,
 )
 

@@ -38,7 +38,6 @@ def _spec_leaves(specs):
 @pytest.mark.parametrize("mesh_name", list(MESHES))
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_specs_match_param_tree(arch, mesh_name):
-    cfg = get_config(arch + "-smoke")  # same tree structure, tiny leaves
     full = get_config(arch)
     mesh = fake_mesh(MESHES[mesh_name])
     params = jax.eval_shape(lambda k: init_params(full, k),
@@ -48,7 +47,6 @@ def test_specs_match_param_tree(arch, mesh_name):
     ss = jax.tree_util.tree_structure(specs,
                                       is_leaf=lambda x: isinstance(x, P))
     assert sd == ss, f"{arch} spec tree != param tree"
-    del cfg
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
