@@ -12,6 +12,14 @@ where the decode-throughput headroom lives.
 Reported per cell: decode tok/s, ms/step, HLO collective count + critical
 depth (the structural metric that transfers to the TPU target), and the
 realized pool statistics.
+
+The ENGINE cells (``engine_rows``) run the full continuous-batching
+``ServeEngine`` under mixed-length traffic — paged KV cache vs contiguous,
+at VCI pool sizes 1/4/8 — and report end-to-end tok/s plus
+``cache_bytes_resident``: the paged pool is sized to the live-token budget
+(finished slots' pages reclaim immediately; admission allocates on entry),
+so it holds the SAME tokens in fewer resident bytes than the
+``batch x max_len`` contiguous cache.
 """
 
 from __future__ import annotations
@@ -30,10 +38,19 @@ from repro.launch.roofline import collective_critical_depth
 from repro.models.transformer import Model, init_cache, init_params
 from repro.serve.comm import ServeCommPlan, serve_cache_specs, \
     serve_param_specs, serve_tp_validate
-from repro.serve.engine import greedy_sample, make_prefill
+from repro.serve.engine import Request, ServeEngine, greedy_sample, \
+    make_prefill
 
 MAX_LEN = 64
 PROMPT = 16
+
+# engine (continuous-batching) cells: mixed-length traffic. max_len stays
+# at/below mixtral's sliding window so the MoE arch keeps a non-ring cache
+# (ring caches have no paged layout).
+ENGINE_MAX_LEN = 64
+ENGINE_BATCH = 4
+ENGINE_PAGE = 8
+ENGINE_PAGES = 17           # 16 allocatable pages = 128 live-token slots
 
 
 def serve_mesh(devices: int, tp: int = 2) -> Mesh:
@@ -122,6 +139,38 @@ def run_cell(cfg, params, mesh, *, batch: int, lanes: int, num_vcis: int,
     }
 
 
+def engine_requests(cfg, n: int, max_new: int):
+    """Mixed-length traffic: prompt lengths in [8, 16] — the --vary-prompts
+    shape the left-padded/paged paths exist for."""
+    rng = np.random.default_rng(1)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        (int(rng.integers(8, 17)),),
+                                        dtype=np.int32),
+                    max_new_tokens=max_new) for _ in range(n)]
+
+
+def run_engine_cell(cfg, params, mesh, *, paged: bool, num_vcis: int,
+                    requests: int, max_new: int):
+    """End-to-end continuous batching: #requests > batch_size so slots
+    recycle mid-stream (paged admission runs under the mesh)."""
+    plan = ServeCommPlan(num_vcis=num_vcis, token_impl="data")
+    eng = ServeEngine(cfg, params, batch_size=ENGINE_BATCH,
+                      max_len=ENGINE_MAX_LEN, mesh=mesh, comm_plan=plan,
+                      paged=paged, page_size=ENGINE_PAGE,
+                      num_pages=ENGINE_PAGES if paged else None)
+    assert eng._paged == paged, "paged engine silently fell back"
+    eng.generate(engine_requests(cfg, requests, max_new))  # compile warmup
+    t = time_fn(lambda: eng.generate(engine_requests(cfg, requests, max_new)),
+                warmup=0, reps=2 if SMOKE else 3, min_time_s=0.0)
+    n_tok = requests * max_new
+    return {
+        "cache": "paged" if paged else "contiguous",
+        "tok_s": n_tok / t["median_s"],
+        "cache_bytes_resident": eng.cache_bytes_resident,
+        "admit_under_mesh": eng._can_admit,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=8)
@@ -158,6 +207,31 @@ def main():
         return next(r for r in rows if r["arch"] == arch
                     and r["batch"] == batch and r["num_vcis"] == nv)
 
+    # engine-level paged-vs-contiguous cells under mixed-length traffic
+    eng_vcis = (1, 8) if SMOKE else (1, 4, 8)
+    requests = 6 if SMOKE else 8
+    max_new = 4 if SMOKE else 8
+    eng_csv = CSV("serve_engine_paged")
+    engine_rows = []
+    for arch in archs:
+        cfg = get_config(arch)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        for paged in (False, True):
+            for nv in eng_vcis:
+                r = run_engine_cell(cfg, params, mesh, paged=paged,
+                                    num_vcis=nv, requests=requests,
+                                    max_new=max_new)
+                row = dict(arch=arch, num_vcis=nv,
+                           batch=ENGINE_BATCH, max_len=ENGINE_MAX_LEN,
+                           requests=requests, max_new=max_new, **r)
+                engine_rows.append(row)
+                eng_csv.add(**row)
+    eng_csv.dump()
+
+    def eng_cell(arch, cache, nv):
+        return next(r for r in engine_rows if r["arch"] == arch
+                    and r["cache"] == cache and r["num_vcis"] == nv)
+
     # CPU-host wall clock is a PROXY (see benchmarks.common): tok/s cells
     # are reported per pool size, but the metric that transfers to the TPU
     # target is the collective critical depth — dedicated streams must
@@ -174,7 +248,23 @@ def main():
                 "depth_1vci": lo["critical_depth"],
                 "depth_maxvci": hi["critical_depth"],
             }
-    emit_json("serve_streams", {"rows": rows, "summary": summary,
+    # the paged acceptance cell: same tokens, fewer resident cache bytes
+    engine_summary = {}
+    for arch in archs:
+        for nv in eng_vcis:
+            c = eng_cell(arch, "contiguous", nv)
+            p = eng_cell(arch, "paged", nv)
+            engine_summary[f"{arch}/vcis{nv}"] = {
+                "tok_s_contiguous": c["tok_s"],
+                "tok_s_paged": p["tok_s"],
+                "cache_bytes_contiguous": c["cache_bytes_resident"],
+                "cache_bytes_paged": p["cache_bytes_resident"],
+                "cache_bytes_ratio": (p["cache_bytes_resident"]
+                                      / c["cache_bytes_resident"]),
+            }
+    emit_json("serve_streams", {"rows": rows, "engine_rows": engine_rows,
+                                "summary": summary,
+                                "engine_summary": engine_summary,
                                 "mesh": {"devices": args.devices,
                                          "tp": args.tp,
                                          "lanes": args.lanes}})

@@ -12,7 +12,6 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.data.pipeline import synthetic_batch
-from repro.models.transformer import init_params
 from repro.optim.schedule import cosine_schedule
 from repro.serve.engine import Request, ServeEngine
 from repro.train.trainer import make_train_step, train_state_init

@@ -1,0 +1,113 @@
+"""Paged KV-cache page gather — Pallas TPU (scalar prefetch).
+
+The paged serve cache stores K/V in a fixed pool of fixed-size pages
+(``(num_pages, page_size, KV, hd)`` per layer) with a per-slot page table;
+attention needs each slot's pages laid out contiguously in sequence order.
+This is the same shape of problem as the gradient-bucket pack
+(`repro.kernels.bucket_pack`): a table-driven tile gather whose index
+tables are known outside the kernel. The TPU kernel DMAs one pool page per
+grid step straight to its destination row, driven by the prefetched page
+table — unmapped entries (``-1``, pad prefix / freed slots) emit zeros.
+
+Three equivalent implementations, mirroring the bucket-pack layering:
+
+* :func:`paged_gather_pallas` — the TPU scalar-prefetch kernel
+  (interpret-mode tested on CPU);
+* :func:`paged_gather_take`   — the vectorized ``jnp.take`` lowering used
+  on backends without a Pallas TPU pipeline (XLA:CPU scalarizes nothing
+  here — it is one gather);
+* :func:`paged_gather_ref`    — scalar oracle for the kernel tests.
+
+:func:`paged_gather` dispatches on the backend; the model code calls only
+this entry point.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(table_ref, pool_ref, out_ref):
+    t = pl.program_id(0)
+    mapped = table_ref[t] >= 0
+    out_ref[...] = jnp.where(mapped, pool_ref[...],
+                             jnp.zeros_like(pool_ref[...]))
+
+
+def paged_gather_pallas(pool: jax.Array, table: jax.Array, *,
+                        interpret: bool = False) -> jax.Array:
+    """pool: (NP, PS, KV, hd) one layer's page pool; table: (B, MAXP) int32
+    pool page ids (-1 unmapped). Returns (B, MAXP*PS, KV, hd) — slot b's
+    pages in logical order, unmapped pages zero-filled.
+
+    Grid = one destination page per step; the BlockSpec index_map consumes
+    the prefetched (flattened) table so each step DMAs exactly one pool
+    page (clamped to 0 for unmapped entries, zeroed in the kernel body).
+    """
+    b, maxp = table.shape
+    np_, ps = pool.shape[0], pool.shape[1]
+    tail = pool.shape[2:]
+    flat_table = table.reshape(-1)
+    pool2 = pool.reshape(np_, ps, -1)
+    e = pool2.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * maxp,),
+        in_specs=[
+            pl.BlockSpec((1, ps, e),
+                         lambda t, table_ref: (jnp.maximum(table_ref[t], 0),
+                                               0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ps, e), lambda t, table_ref: (t, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * maxp, ps, e), pool.dtype),
+        interpret=interpret,
+    )(flat_table, pool2)
+    return out.reshape((b, maxp * ps) + tail)
+
+
+def paged_gather_take(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """Vectorized lowering: ONE row gather of the pool's pages plus an
+    unmapped-page mask — numerically identical to the kernel."""
+    b, maxp = table.shape
+    ps = pool.shape[1]
+    pages = jnp.take(pool, jnp.clip(table, 0, pool.shape[0] - 1), axis=0)
+    mapped = (table >= 0).reshape(b, maxp, 1, 1, 1)
+    pages = jnp.where(mapped, pages, jnp.zeros((), pool.dtype))
+    return pages.reshape((b, maxp * ps) + pool.shape[2:])
+
+
+def paged_gather_ref(pool, table) -> jax.Array:
+    """Scalar jnp oracle for the interpret-mode kernel tests."""
+    b, maxp = table.shape
+    ps = pool.shape[1]
+    rows = []
+    for i in range(b):
+        pages = []
+        for p in range(maxp):
+            pid = int(table[i, p])
+            pages.append(pool[pid] if pid >= 0
+                         else jnp.zeros_like(pool[0]))
+        rows.append(jnp.concatenate(pages, axis=0))
+    return jnp.stack(rows).reshape((b, maxp * ps) + pool.shape[2:])
+
+
+@functools.cache
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def paged_gather(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """Backend dispatch: Pallas tile-gather on TPU, one-gather jnp.take
+    lowering elsewhere (the CPU smoke/conformance path)."""
+    if _on_tpu():
+        return paged_gather_pallas(pool, table)
+    return paged_gather_take(pool, table)

@@ -166,6 +166,11 @@ def main() -> None:
     ap.add_argument("--opt", default="",
                     help="comma-separated optimization toggles "
                          "(moe_dispatch,decode_cache,fsdp) — §Perf variants")
+    ap.add_argument("--stable", action="store_true",
+                    help="deterministic reports: drop wall-clock fields "
+                         "(compile_s) so a re-run diffs clean against the "
+                         "committed reports/dryrun_baseline — the CI "
+                         "dryrun-drift job runs with this flag")
     args = ap.parse_args()
     opts = tuple(o for o in args.opt.split(",") if o)
 
@@ -196,6 +201,8 @@ def main() -> None:
                            "status": "fail", "error": repr(e),
                            "traceback": traceback.format_exc()}
                     print(f"[FAIL] {tag}: {e!r}", flush=True)
+                if args.stable:
+                    row.pop("compile_s", None)
                 with open(os.path.join(args.out, tag + ".json"), "w") as f:
                     json.dump(row, f, indent=1, default=str)
     print(f"done; failures={failures}")

@@ -8,6 +8,13 @@ Serve-path VCI streams (manual TP, collectives on per-purpose CommContexts):
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b-smoke \
         --tp 2 --num-vcis 8 --policy fcfs --temperature 0.8 --stop 17
+
+Paged KV cache (pool of fixed-size pages + per-slot page table; mid-stream
+admission then also works under the mesh):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b-smoke \
+        --tp 2 --vary-prompts --paged --page-size 16 --pages 40
 """
 
 from __future__ import annotations
@@ -47,6 +54,14 @@ def main() -> None:
     ap.add_argument("--policy", default="fcfs",
                     choices=("fcfs", "round_robin", "hash", "hinted"),
                     help="VCI pool assignment policy (tp>1)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache (page pool + per-slot page table); "
+                         "mid-stream admission then works under --tp too")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per page (paged cache)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="page-pool size incl. the trash page (default: "
+                         "full provision batch*ceil(max_len/page_size)+1)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -71,7 +86,18 @@ def main() -> None:
     engine = ServeEngine(cfg, params, batch_size=args.batch,
                          max_len=args.max_len, mesh=mesh,
                          comm_plan=comm_plan, temperature=args.temperature,
-                         seed=args.seed)
+                         seed=args.seed, paged=args.paged,
+                         page_size=args.page_size, num_pages=args.pages)
+    if args.paged:
+        if not engine._paged:
+            raise SystemExit(
+                f"--paged requested but arch {cfg.name!r} has no paged "
+                f"layout (ring/SSM/audio/VLM caches fall back to grouped "
+                f"contiguous batches) — drop --paged or pick an attention "
+                f"arch with max_len <= its sliding window")
+        print(f"paged cache: page_size={args.page_size} "
+              f"num_pages={engine._num_pages} "
+              f"(admit_under_mesh={engine._can_admit})")
 
     rng = np.random.default_rng(args.seed)
     reqs = []
@@ -90,7 +116,8 @@ def main() -> None:
     dt = time.time() - t0
     n_tok = sum(r.generated.shape[-1] for r in done)
     print(f"{len(done)} requests, {n_tok} new tokens in {dt:.2f}s "
-          f"({n_tok/dt:.1f} tok/s)")
+          f"({n_tok/dt:.1f} tok/s) "
+          f"cache_bytes_resident={engine.cache_bytes_resident}")
     if comm_plan is not None:
         s = comm_plan.stats
         print(f"vci stats: acquires={s.acquires} fallback_hits="

@@ -108,15 +108,19 @@ class KVCache:
                    jnp.zeros((), jnp.int32), ring=bool(w is not None and w < max_len))
 
 
-def _expand_to_cache(cache: KVCache, k_new):
+def _expand_heads(k_new, kv_stored: int):
     """OPT(decode_cache): the cache may store each KV head ``e`` times (so
     stored heads == TP degree and attention shards losslessly); expand the
-    incoming head dim to match."""
-    kv_c, kv_n = cache.k.shape[2], k_new.shape[2]
-    if kv_c == kv_n:
+    incoming head dim (axis 2 of (B,S,KV,hd)) to match."""
+    kv_n = k_new.shape[2]
+    if kv_stored == kv_n:
         return k_new
-    assert kv_c % kv_n == 0, (kv_c, kv_n)
-    return jnp.repeat(k_new, kv_c // kv_n, axis=2)
+    assert kv_stored % kv_n == 0, (kv_stored, kv_n)
+    return jnp.repeat(k_new, kv_stored // kv_n, axis=2)
+
+
+def _expand_to_cache(cache: KVCache, k_new):
+    return _expand_heads(k_new, cache.k.shape[2])
 
 
 def cache_update_decode(cache: KVCache, k_new, v_new) -> KVCache:
@@ -172,6 +176,149 @@ def decode_attention(cfg: ModelConfig, q, cache: KVCache,
     logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache: fixed page pool + per-slot page table
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class PagedKVCache:
+    """Layer-stacked paged KV cache.
+
+    Instead of one contiguous ``(L, B, S_max, KV, hd)`` buffer, K/V live in
+    a fixed pool of fixed-size pages ``(L, num_pages, page_size, KV, hd)``
+    with a per-slot page table ``(B, max_pages)`` mapping each slot's
+    logical page (virtual position ``p`` -> logical page ``p // page_size``)
+    to a pool page, ``-1`` = unmapped. Pool page 0 is the engine's TRASH
+    page: writes routed through an unmapped table entry (pad prefix,
+    finished slots) land there and are never validly read — attention masks
+    by ``[start, length)`` exactly as on the contiguous cache, so the two
+    layouts are token-identical by construction.
+
+    The table is shared by every layer (one allocation covers the whole
+    stack); ``page_size`` is static metadata so caches scan over the layer
+    axis. Allocation lives in :mod:`repro.serve.paging`.
+    """
+
+    def __init__(self, k, v, table, length, page_size: int):
+        self.k = k                # (L, NP, PS, KV, hd)
+        self.v = v
+        self.table = table        # (B, MAXP) int32
+        self.length = length      # () int32 — absolute write cursor
+        self.page_size = int(page_size)
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.table, self.length), self.page_size
+
+    @classmethod
+    def tree_unflatten(cls, page_size, children):
+        return cls(*children, page_size=page_size)
+
+
+@jax.tree_util.register_pytree_node_class
+class PagedKVLayer:
+    """One layer's view of a :class:`PagedKVCache` (pool slice + the shared
+    table/cursor) — what the per-layer block code sees in place of a
+    :class:`KVCache`."""
+
+    def __init__(self, k, v, table, length, page_size: int):
+        self.k = k                # (NP, PS, KV, hd)
+        self.v = v
+        self.table = table        # (B, MAXP) int32
+        self.length = length      # () int32
+        self.page_size = int(page_size)
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.table, self.length), self.page_size
+
+    @classmethod
+    def tree_unflatten(cls, page_size, children):
+        return cls(*children, page_size=page_size)
+
+
+def _paged_write_ids(table, pos, page_size):
+    """Pool page ids for writing virtual position(s) ``pos`` per slot;
+    unmapped entries route to the trash page (0)."""
+    ids = jnp.take(table, pos // page_size, axis=1)   # (B,) or (B, n)
+    return jnp.where(ids >= 0, ids, 0)
+
+
+def paged_update_decode(layer: PagedKVLayer, k_new, v_new) -> PagedKVLayer:
+    """Append ONE token (k_new/v_new: (B,1,KVn,hd)) at the shared cursor.
+
+    Every slot writes pool page ``table[b, cur // PS]`` at in-page offset
+    ``cur % PS`` — distinct pages by the allocator's unique-ownership
+    invariant, so the scatter never collides (except in the trash page,
+    whose content is never read)."""
+    ps = layer.page_size
+    k_new = _expand_heads(k_new, layer.k.shape[2])
+    v_new = _expand_heads(v_new, layer.k.shape[2])
+    pos = layer.length
+    ids = _paged_write_ids(layer.table, pos[None], ps)[:, 0]  # (B,)
+    off = pos % ps
+    k = layer.k.at[ids, off].set(k_new[:, 0].astype(layer.k.dtype))
+    v = layer.v.at[ids, off].set(v_new[:, 0].astype(layer.v.dtype))
+    return PagedKVLayer(k, v, layer.table, layer.length + 1, ps)
+
+
+def paged_prefill_update(layer: PagedKVLayer, k_new, v_new) -> PagedKVLayer:
+    """Write a fresh prefill (k_new/v_new: (B,S,KVn,hd)) at positions
+    ``[0, S)`` — whole pages scattered into the pool; positions whose pages
+    are unmapped (each slot's left-pad prefix) go to the trash page."""
+    ps = layer.page_size
+    k_new = _expand_heads(k_new, layer.k.shape[2])
+    v_new = _expand_heads(v_new, layer.k.shape[2])
+    b, s = k_new.shape[:2]
+    npg = -(-s // ps)
+    pad = npg * ps - s
+    if pad:
+        k_new = jnp.pad(k_new, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_new = jnp.pad(v_new, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kp = k_new.reshape((b, npg, ps) + k_new.shape[2:])
+    vp = v_new.reshape((b, npg, ps) + v_new.shape[2:])
+    ids = layer.table[:, :npg]
+    ids = jnp.where(ids >= 0, ids, 0)                 # (B, npg)
+    k = layer.k.at[ids].set(kp.astype(layer.k.dtype))
+    v = layer.v.at[ids].set(vp.astype(layer.v.dtype))
+    return PagedKVLayer(k, v, layer.table, layer.length + s, ps)
+
+
+def paged_splice(cache: PagedKVCache, slot, dest, k_rows, v_rows
+                 ) -> PagedKVCache:
+    """Admission splice: write ``k_rows``/``v_rows`` (``(L, S, KV, hd)``)
+    into ``slot``'s pages at virtual positions ``[dest, dest + S)`` — the
+    paged analogue of the contiguous engine's dynamic_update_slice splice,
+    page-table-indirect and not page-aligned (positions below the admitted
+    request's ``start`` fall through unmapped entries to the trash page)."""
+    ps = cache.page_size
+    ll, np_, _, kv, hd = cache.k.shape
+    s = k_rows.shape[1]
+    pos = jnp.asarray(dest, jnp.int32) + jnp.arange(s, dtype=jnp.int32)
+    row = jnp.take(cache.table, jnp.asarray(slot, jnp.int32), axis=0)
+    ids = jnp.take(row, pos // ps)
+    ids = jnp.where(ids >= 0, ids, 0)
+    flat = ids * ps + pos % ps                        # (S,)
+    k = cache.k.reshape(ll, np_ * ps, kv, hd)
+    v = cache.v.reshape(ll, np_ * ps, kv, hd)
+    k = k.at[:, flat].set(k_rows.astype(k.dtype)).reshape(cache.k.shape)
+    v = v.at[:, flat].set(v_rows.astype(v.dtype)).reshape(cache.v.shape)
+    return PagedKVCache(k, v, cache.table, cache.length, ps)
+
+
+def paged_decode_attention(cfg: ModelConfig, q, layer: PagedKVLayer,
+                           start: Optional[jax.Array] = None) -> jax.Array:
+    """One-token attention against the paged cache: gather each slot's
+    pages into sequence order (Pallas tile-gather on TPU, one jnp.take
+    elsewhere — :mod:`repro.kernels.paged_kv`), then the standard masked
+    decode attention. Validity is identical to the contiguous layout —
+    ``[start, length)`` — which is what makes paged-vs-contiguous token
+    equality exact rather than approximate."""
+    from repro.kernels.paged_kv import paged_gather
+    k_view = paged_gather(layer.k, layer.table)
+    v_view = paged_gather(layer.v, layer.table)
+    view = KVCache(k_view, v_view, layer.length, ring=False)
+    return decode_attention(cfg, q, view, start=start)
 
 
 # ---------------------------------------------------------------------------

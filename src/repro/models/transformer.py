@@ -24,9 +24,14 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.attention import (
     KVCache,
+    PagedKVCache,
+    PagedKVLayer,
     attention,
     cache_update_decode,
     decode_attention,
+    paged_decode_attention,
+    paged_prefill_update,
+    paged_update_decode,
 )
 from repro.models.layers import (
     apply_norm,
@@ -235,9 +240,60 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return DecodeCache(kv, ssm, jnp.zeros((), jnp.int32))
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                     page_size: int, num_pages: int,
+                     dtype=jnp.bfloat16) -> DecodeCache:
+    """Paged decode cache: a fixed pool of ``num_pages`` pages of
+    ``page_size`` tokens (page 0 reserved as trash) + an all-unmapped
+    per-slot page table covering virtual positions ``[0, max_len)``.
+
+    Attention-cache architectures only: ring (sliding-window) caches reuse
+    slots modulo the window and SSM state has no per-position pages — the
+    serve engine keeps the grouped contiguous fallback for those.
+    """
+    if cfg.family not in ("dense", "moe") or cfg.modality != "text":
+        raise NotImplementedError(
+            f"paged KV cache needs a text attention arch, got "
+            f"family={cfg.family!r} modality={cfg.modality!r}")
+    if cfg.sliding_window is not None and cfg.sliding_window < max_len:
+        raise NotImplementedError(
+            "paged KV cache does not support ring (sliding-window) caches; "
+            "use the contiguous cache")
+    if page_size < 1 or num_pages < 2:
+        raise ValueError(f"need page_size >= 1 and num_pages >= 2 "
+                         f"(page 0 is the trash page), got "
+                         f"{page_size}/{num_pages}")
+    if "kv_fp8" in cfg.opts and jnp.dtype(dtype) == jnp.bfloat16:
+        dtype = jnp.float8_e4m3fn  # OPT(kv_fp8): see init_cache
+    kvh = cfg.num_kv_heads * max(1, cfg.decode_kv_expand)
+    max_pages = -(-max_len // page_size)
+    shape = (cfg.num_layers, num_pages, page_size, kvh, cfg.head_dim)
+    kv = PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                      jnp.full((batch, max_pages), -1, jnp.int32),
+                      jnp.zeros((), jnp.int32), page_size)
+    return DecodeCache(kv, None, jnp.zeros((), jnp.int32))
+
+
 # ---------------------------------------------------------------------------
 # blocks
 # ---------------------------------------------------------------------------
+
+def _layer_kv(kv, l: int):
+    """Layer ``l``'s view of a stacked (contiguous or paged) KV cache."""
+    if isinstance(kv, PagedKVCache):
+        return PagedKVLayer(kv.k[l], kv.v[l], kv.table, kv.length,
+                            kv.page_size)
+    return KVCache(kv.k[l], kv.v[l], kv.length, kv.ring)
+
+
+def _restack_kv(kv, ks, vs, advanced: int):
+    """Stack per-layer outputs back into the cache's layout; ``advanced`` is
+    how many tokens the cursor moved (S for prefill, 1 for decode)."""
+    if isinstance(kv, PagedKVCache):
+        return PagedKVCache(jnp.stack(ks), jnp.stack(vs), kv.table,
+                            kv.length + advanced, kv.page_size)
+    return KVCache(jnp.stack(ks), jnp.stack(vs), kv.length + advanced,
+                   kv.ring)
 
 def _attn_apply(cfg: ModelConfig, x, p, positions, shard,
                 kv: Optional[KVCache] = None, decode: bool = False,
@@ -263,14 +319,21 @@ def _attn_apply(cfg: ModelConfig, x, p, positions, shard,
 
     new_kv = None
     if decode:
-        new_kv = cache_update_decode(kv, k, v)
-        if shard is not None:
-            new_kv = KVCache(shard.kv_cache(new_kv.k), shard.kv_cache(new_kv.v),
-                             new_kv.length, new_kv.ring)
-        o = decode_attention(cfg, q, new_kv, start=start)
+        if isinstance(kv, PagedKVLayer):
+            new_kv = paged_update_decode(kv, k, v)
+            o = paged_decode_attention(cfg, q, new_kv, start=start)
+        else:
+            new_kv = cache_update_decode(kv, k, v)
+            if shard is not None:
+                new_kv = KVCache(shard.kv_cache(new_kv.k),
+                                 shard.kv_cache(new_kv.v),
+                                 new_kv.length, new_kv.ring)
+            o = decode_attention(cfg, q, new_kv, start=start)
     else:
         o = attention(cfg, q, k, v, start=start)
-        if kv is not None:  # prefill: write the cache
+        if isinstance(kv, PagedKVLayer):  # prefill: write the page pool
+            new_kv = paged_prefill_update(kv, k, v)
+        elif kv is not None:              # prefill: write the cache
             new_kv = _prefill_cache(kv, k, v)
     o = o.reshape(b, s, -1)
     o = o @ p["wo"].astype(o.dtype)
@@ -462,6 +525,9 @@ class Model:
             # comm-mode (inference) stack unrolls the layer loop.
             return self._attn_stack_unrolled(params, x, positions, cache,
                                              start)
+        if cache is not None and isinstance(cache.kv, PagedKVCache):
+            return self._attn_stack_paged(params, x, positions, cache, remat,
+                                          start=start)
 
         def body(carry, scanned):
             x = carry
@@ -493,6 +559,36 @@ class Model:
         aux = {"load_balance": aux_v[:, 0].sum(), "router_z": aux_v[:, 1].sum()}
         return x, aux, new_cache
 
+    def _attn_stack_paged(self, params, x, positions, cache, remat,
+                          start=None):
+        """Prefill into the paged pool: the pool slices scan over the layer
+        axis; the page table and write cursor are shared by every layer."""
+        cfg = self.cfg
+        pk = cache.kv
+
+        def body(carry, scanned):
+            x = carry
+            lp, kl, vl = scanned
+            layer = PagedKVLayer(kl, vl, pk.table, pk.length, pk.page_size)
+            x, new_kv, aux = _dense_block(cfg, x, lp, positions, self.shard,
+                                          kv=layer, decode=False,
+                                          comm=self.comm, start=start)
+            aux_vec = jnp.stack([aux.get("load_balance", jnp.zeros(())),
+                                 aux.get("router_z", jnp.zeros(()))])
+            return x, (new_kv.k, new_kv.v, aux_vec)
+
+        if remat:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+        x, (k_out, v_out, aux_v) = jax.lax.scan(
+            body, x, (params["layers"], pk.k, pk.v))
+        s_new = x.shape[1]
+        new_cache = DecodeCache(
+            PagedKVCache(k_out, v_out, pk.table, pk.length + s_new,
+                         pk.page_size),
+            None, cache.length + s_new)
+        aux = {"load_balance": aux_v[:, 0].sum(), "router_z": aux_v[:, 1].sum()}
+        return x, aux, new_cache
+
     def _attn_stack_unrolled(self, params, x, positions, cache, start=None):
         """Python-loop layer stack for the comm (VCI-stream) serve path."""
         cfg = self.cfg
@@ -503,8 +599,7 @@ class Model:
             lp = take(lambda a: a[l], params["layers"])
             kv = None
             if cache is not None:
-                kv = KVCache(cache.kv.k[l], cache.kv.v[l], cache.kv.length,
-                             cache.kv.ring)
+                kv = _layer_kv(cache.kv, l)
             x, new_kv, aux = _dense_block(cfg, x, lp, positions, None,
                                           kv=kv, decode=False,
                                           comm=self.comm, start=start)
@@ -515,11 +610,9 @@ class Model:
             rz = rz + aux.get("router_z", jnp.zeros(()))
         new_cache = None
         if cache is not None:
-            s_new = x.shape[1]
             new_cache = DecodeCache(
-                KVCache(jnp.stack(ks), jnp.stack(vs),
-                        cache.kv.length + s_new, cache.kv.ring),
-                None, cache.length + s_new)
+                _restack_kv(cache.kv, ks, vs, x.shape[1]),
+                None, cache.length + x.shape[1])
         return x, {"load_balance": lb, "router_z": rz}, new_cache
 
     def _ssm_stack(self, params, x, positions, cache, remat):
@@ -653,16 +746,35 @@ class Model:
             ks, vs = [], []
             for l in range(cfg.num_layers):
                 lp = take(lambda a: a[l], params["layers"])
-                kv = KVCache(cache.kv.k[l], cache.kv.v[l], cache.kv.length,
-                             cache.kv.ring)
+                kv = _layer_kv(cache.kv, l)
                 x, new_kv, _ = _dense_block(cfg, x, lp, positions, None,
                                             kv=kv, decode=True,
                                             comm=self.comm, start=start)
                 ks.append(new_kv.k)
                 vs.append(new_kv.v)
+            new_cache = DecodeCache(_restack_kv(cache.kv, ks, vs, 1),
+                                    None, cache.length + 1)
+            return x, new_cache
+
+        if isinstance(cache.kv, PagedKVCache):
+            pk = cache.kv
+
+            def paged_body(carry, scanned):
+                x = carry
+                lp, kl, vl = scanned
+                layer = PagedKVLayer(kl, vl, pk.table, pk.length,
+                                     pk.page_size)
+                x, new_kv, _ = _dense_block(cfg, x, lp, positions,
+                                            self.shard, kv=layer,
+                                            decode=True, comm=self.comm,
+                                            start=start)
+                return x, (new_kv.k, new_kv.v)
+
+            x, (k_out, v_out) = jax.lax.scan(
+                paged_body, x, (params["layers"], pk.k, pk.v))
             new_cache = DecodeCache(
-                KVCache(jnp.stack(ks), jnp.stack(vs), cache.kv.length + 1,
-                        cache.kv.ring),
+                PagedKVCache(k_out, v_out, pk.table, pk.length + 1,
+                             pk.page_size),
                 None, cache.length + 1)
             return x, new_cache
 

@@ -8,9 +8,19 @@ from repro.serve.engine import (
     select_tokens,
     temperature_sample,
 )
+from repro.serve.paging import (
+    PageState,
+    alloc_slot_pages,
+    alloc_step_pages,
+    free_slot_pages,
+    page_state_init,
+    pages_for_span,
+)
 
 __all__ = [
-    "PURPOSES", "Request", "ServeComm", "ServeCommPlan", "ServeEngine",
-    "greedy_sample", "make_prefill", "make_serve_step", "select_tokens",
+    "PURPOSES", "PageState", "Request", "ServeComm", "ServeCommPlan",
+    "ServeEngine", "alloc_slot_pages", "alloc_step_pages",
+    "free_slot_pages", "greedy_sample", "make_prefill", "make_serve_step",
+    "page_state_init", "pages_for_span", "select_tokens",
     "temperature_sample",
 ]

@@ -224,7 +224,18 @@ def serve_cache_specs(cache, tp: int, batch_shards: int, *,
                       axis: str = TP_AXIS, batch_axis="data"):
     """Spec tree for a DecodeCache: KV heads over the TP axis, batch over
     ``batch_axis`` (a mesh axis name or tuple — pass the SAME entry the
-    token spec uses); scalars (cursor lengths) replicate."""
+    token spec uses); scalars (cursor lengths) replicate.
+
+    Paged caches (:class:`repro.models.attention.PagedKVCache`): the page
+    pool is a SHARED resource — any slot may hold any page — so it cannot
+    shard over the batch axes; pools replicate over data and shard only
+    their KV heads over the TP axis, and the page table / cursor replicate.
+    (That is exactly the paper's argument inverted: the pool is the one
+    deliberately-shared resource, and the per-purpose VCI streams are what
+    keep the lanes from serializing on it.)
+    """
+    from repro.models.attention import PagedKVCache
+
     def assign(leaf):
         if getattr(leaf, "ndim", 0) == 5:   # (L, B, S, KV, hd) stacked cache
             b_ax = batch_axis if (batch_shards > 1
@@ -232,4 +243,12 @@ def serve_cache_specs(cache, tp: int, batch_shards: int, *,
             kv_ax = axis if (tp > 1 and leaf.shape[3] % tp == 0) else None
             return P(None, b_ax, None, kv_ax, None)
         return P()
+
+    kv = getattr(cache, "kv", None)
+    if isinstance(kv, PagedKVCache):
+        kv_ax = axis if (tp > 1 and kv.k.shape[3] % tp == 0) else None
+        pool = P(None, None, None, kv_ax, None)   # (L, NP, PS, KV, hd)
+        kv_spec = PagedKVCache(pool, pool, P(), P(), kv.page_size)
+        rest = jax.tree_util.tree_map(assign, cache.ssm)
+        return type(cache)(kv_spec, rest, P())
     return jax.tree_util.tree_map(assign, cache)

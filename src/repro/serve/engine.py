@@ -22,6 +22,13 @@ bucketing path.
 * ``generate()`` validates ``prompt_len + max_new_tokens <= max_len`` up
   front — decode can never write past the cache depth.
 
+``paged=True`` replaces the contiguous cache with the PAGED KV cache
+(:class:`~repro.models.attention.PagedKVCache` + the pure-JAX allocator in
+:mod:`repro.serve.paging`): a finished slot's pages are reclaimed the
+moment it finishes, and mid-stream admission works under a mesh because
+the admitted request prefills into freshly allocated pages under the same
+TP specs as the running batch. See the :class:`ServeEngine` docstring.
+
 Architectures whose decode state cannot be pad-masked per row (SSM/hybrid
 recurrences, ring caches, VLM/audio frontends) fall back to equal-length
 grouped batches — same results, no corruption, just less packing.
@@ -41,14 +48,27 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import set_mesh, shard_map
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import Sharder, batch_axes
-from repro.models.attention import KVCache
-from repro.models.transformer import DecodeCache, Model, init_cache
+from repro.models.attention import KVCache, PagedKVCache, paged_splice
+from repro.models.transformer import (
+    DecodeCache,
+    Model,
+    init_cache,
+    init_paged_cache,
+)
 from repro.serve.comm import (
     TP_AXIS,
     ServeCommPlan,
     serve_cache_specs,
     serve_param_specs,
     serve_tp_validate,
+)
+from repro.serve.paging import (
+    PageState,
+    alloc_slot_pages_jit,
+    alloc_step_pages_jit,
+    free_slot_pages_jit,
+    page_state_init,
+    pages_for_span,
 )
 
 
@@ -156,7 +176,11 @@ def _make_serve_step_comm(cfg: ModelConfig, mesh, comm_plan: ServeCommPlan,
     dpe, nb = _mesh_batch(mesh)
 
     def serve_step(params, tokens, cache, start, temps, key):
-        bd = dpe if (nb > 1 and tokens.shape[0] % nb == 0) else None
+        # the paged pool is a shared resource (any slot <-> any page): it
+        # replicates over the data axes, so the batch does too.
+        paged = isinstance(cache.kv, PagedKVCache)
+        bd = dpe if (not paged and nb > 1
+                     and tokens.shape[0] % nb == 0) else None
         nshard = nb if bd is not None else 1
 
         def inner(params, tokens, cache, start, temps, key):
@@ -188,7 +212,9 @@ def _make_prefill_comm(cfg: ModelConfig, mesh, comm_plan: ServeCommPlan,
 
     def prefill(params, batch, cache, start, temps, key):
         tokens = batch["tokens"]
-        bd = dpe if (nb > 1 and tokens.shape[0] % nb == 0) else None
+        paged = isinstance(cache.kv, PagedKVCache)
+        bd = dpe if (not paged and nb > 1
+                     and tokens.shape[0] % nb == 0) else None
         nshard = nb if bd is not None else 1
 
         def inner(params, batch, cache, start, temps, key):
@@ -249,8 +275,25 @@ class ServeEngine:
 
     ``mesh`` + ``comm_plan`` (or ``num_vcis``) select the manual-TP decode
     whose collectives ride per-purpose VCI streams; with ``mesh=None`` the
-    same loop runs single-device. Early slot recycling (mid-stream
-    admission) is host-driven and currently single-device only.
+    same loop runs single-device.
+
+    ``paged=True`` swaps the contiguous left-padded cache for the paged KV
+    cache: a fixed pool of ``num_pages`` pages of ``page_size`` tokens plus
+    a per-slot page table (:class:`~repro.models.attention.PagedKVCache`,
+    allocation in :mod:`repro.serve.paging`). Two limits of the contiguous
+    layout fall away:
+
+    * a finished slot's pages return to the pool IMMEDIATELY (per-slot
+      compaction for free), so ``num_pages`` can be sized to the live-token
+      budget instead of ``batch * max_len`` — lower resident cache bytes at
+      equal tokens;
+    * mid-stream admission works under a mesh: the admitted request
+      prefills into freshly allocated pages via the SAME mesh/TP specs as
+      the running batch (the contiguous engine can only splice-admit
+      single-device).
+
+    Ring (sliding-window) and SSM/hybrid/audio/VLM caches have no paged
+    layout; those keep the grouped equal-length contiguous fallback.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, batch_size: int,
@@ -258,7 +301,9 @@ class ServeEngine:
                  comm_plan: Optional[ServeCommPlan] = None,
                  num_vcis: Optional[int] = None, vci_policy: str = "fcfs",
                  progress: str = "hybrid", token_impl: str = "barrier",
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.batch_size = batch_size
@@ -288,9 +333,22 @@ class ServeEngine:
         # them -> equal-length grouped batches for those.
         self._padded_ok = (cfg.family in ("dense", "moe")
                            and cfg.modality == "text" and not self._ring)
-        # mid-stream admission re-prefills single requests; keep it off the
-        # sharded path (B=1 doesn't shard over the data axes).
-        self._can_admit = mesh is None
+        # paged cache: attention archs on the continuous path only; other
+        # families keep the grouped contiguous fallback.
+        self._paged = bool(paged) and self._padded_ok
+        self._page_size = int(page_size)
+        self._max_pages = -(-max_len // self._page_size)
+        self._num_pages = (1 + batch_size * self._max_pages
+                           if num_pages is None else int(num_pages))
+        if self._paged and self._num_pages < 2:
+            raise ValueError(f"num_pages must be >= 2 (page 0 is the trash "
+                             f"page), got {self._num_pages}")
+        # mid-stream admission re-prefills single requests. The contiguous
+        # splice is single-device only (B=1 doesn't shard over the data
+        # axes); the PAGED admission prefill runs replicated over data under
+        # the running batch's TP specs, so it works on any mesh.
+        self._can_admit = mesh is None or self._paged
+        self.cache_bytes_resident = 0
 
     # -- small helpers ---------------------------------------------------
     def _next_key(self):
@@ -313,10 +371,28 @@ class ServeEngine:
                     f"{r.max_new_tokens} exceeds the cache depth "
                     f"(max_len={self.max_len}); decode would write past the "
                     f"cache — shorten the request or raise max_len")
+            if self._paged:
+                need = pages_for_span(0, plen + r.max_new_tokens,
+                                      self._page_size)
+                if need > self._num_pages - 1:
+                    raise ValueError(
+                        f"request {i}: needs {need} pages alone but the "
+                        f"pool holds {self._num_pages - 1} allocatable "
+                        f"pages (num_pages={self._num_pages}, page_size="
+                        f"{self._page_size}) — grow the pool")
+
+    def _note_cache(self, cache: DecodeCache) -> None:
+        """Track the largest resident decode-cache footprint of this
+        ``generate()`` call — the paged-vs-contiguous benchmark metric."""
+        n = 0
+        for leaf in jax.tree_util.tree_leaves(cache):
+            n += leaf.size * leaf.dtype.itemsize
+        self.cache_bytes_resident = max(self.cache_bytes_resident, n)
 
     # -- public API ------------------------------------------------------
     def generate(self, requests: List[Request]) -> List[Request]:
         self._validate(requests)
+        self.cache_bytes_resident = 0
         ctx = (set_mesh(self.mesh) if self.mesh is not None
                else contextlib.nullcontext())
         with ctx:
@@ -339,15 +415,26 @@ class ServeEngine:
     def _take_batch(self, pending: List[Request]) -> List[Request]:
         """Pop up to ``batch_size`` requests whose LEFT-PADDED runway fits:
         with pad width P = max(prompt lens), every member still needs
-        ``P + max_new <= max_len`` (padding consumes cache depth)."""
+        ``P + max_new <= max_len`` (padding consumes cache depth). Paged:
+        additionally, the members' worst-case page spans (prompt + full
+        token budget, page-rounded — the reservation that keeps allocation
+        infallible) must fit the pool together."""
         batch: List[Request] = []
         pad = 0
         i = 0
         while i < len(pending) and len(batch) < self.batch_size:
             r = pending[i]
             p_new = max(pad, int(r.prompt.shape[-1]))
-            if all(p_new + q.max_new_tokens <= self.max_len
-                   for q in batch + [r]):
+            members = batch + [r]
+            fits = all(p_new + q.max_new_tokens <= self.max_len
+                       for q in members)
+            if fits and self._paged:
+                fits = sum(
+                    pages_for_span(p_new - int(q.prompt.shape[-1]),
+                                   p_new + q.max_new_tokens,
+                                   self._page_size)
+                    for q in members) <= self._num_pages - 1
+            if fits:
                 batch.append(pending.pop(i))
                 pad = p_new
             else:
@@ -360,6 +447,7 @@ class ServeEngine:
                         pending: List[Request]) -> None:
         cfg = self.cfg
         B = self.batch_size
+        PS = self._page_size
         slots = [_Slot() for _ in range(B)]
         for s, r in zip(slots, batch):
             s.activate(r)
@@ -373,7 +461,23 @@ class ServeEngine:
         start = np.asarray([pad - p for p in plens], np.int32)
         temps = np.asarray([self._temp_of(s.req) if s.req else 0.0
                             for s in slots], np.float32)
-        cache = init_cache(cfg, B, self.max_len, dtype=self._cache_dtype)
+        reserved: Dict[int, int] = {}  # slot -> worst-case page span
+        if self._paged:
+            cache = init_paged_cache(cfg, B, self.max_len, page_size=PS,
+                                     num_pages=self._num_pages,
+                                     dtype=self._cache_dtype)
+            self._owner = page_state_init(self._num_pages, B,
+                                          self._max_pages).owner
+            for i, s in enumerate(slots):
+                if s.req is None:
+                    continue  # empty slot: writes land in the trash page
+                cache = self._palloc(cache, i, int(start[i]) // PS,
+                                     (pad - 1) // PS)
+                reserved[i] = pages_for_span(
+                    int(start[i]), pad + s.req.max_new_tokens, PS)
+        else:
+            cache = init_cache(cfg, B, self.max_len, dtype=self._cache_dtype)
+        self._note_cache(cache)
         nxt, cache = self._prefill(
             self.params, {"tokens": jnp.asarray(tokens)}, cache,
             jnp.asarray(start), jnp.asarray(temps), self._next_key())
@@ -387,28 +491,49 @@ class ServeEngine:
             if len(s.tokens) >= s.req.max_new_tokens:
                 s.finish()
 
+        def reclaim(i: int, s: _Slot, cache):
+            """Per-slot compaction for free: the instant a slot finishes its
+            pages go back to the pool (its decode writes re-route to the
+            trash page through the cleared table row)."""
+            if not (self._paged and s.done and i in reserved):
+                return cache
+            st = free_slot_pages_jit(
+                PageState(cache.kv.table, self._owner),
+                jnp.asarray(i, jnp.int32))
+            self._owner = st.owner
+            reserved.pop(i, None)
+            return self._with_table(cache, st.table)
+
         while True:
             toks = np.array(nxt)  # copy: admission may overwrite a row
             admitted = False
             for i, s in enumerate(slots):
                 if not s.done and s.req is not None:
                     record(s, int(toks[i, 0]))
+                    cache = reclaim(i, s, cache)
             # early slot recycling: prefill the next request into a finished
             # slot just below the shared cursor (start masks older rows)
             if self._can_admit and pending:
                 for i, s in enumerate(slots):
                     if not s.done or not pending:
                         continue
-                    j = self._admittable(pending, cur)
+                    j = self._admittable(pending, cur, reserved)
                     if j is None:
                         continue
                     r = pending.pop(j)
+                    plen = int(r.prompt.shape[-1])
+                    if self._paged:
+                        cache = self._palloc(cache, i, (cur - plen) // PS,
+                                             (cur - 1) // PS)
+                        reserved[i] = pages_for_span(
+                            cur - plen, cur + r.max_new_tokens, PS)
                     tok0, cache = self._admit(r, cache, i, cur)
                     s.activate(r)
-                    start[i] = cur - int(r.prompt.shape[-1])
+                    start[i] = cur - plen
                     temps[i] = self._temp_of(r)
                     toks[i, 0] = tok0
                     record(s, tok0)  # the admission prefill's first token
+                    cache = reclaim(i, s, cache)
                     admitted = True
             if all(s.done or s.req is None for s in slots):
                 break
@@ -419,24 +544,73 @@ class ServeEngine:
                     if not s.done:
                         s.finish()
                 break
+            if self._paged and cur % PS == 0:
+                # the shared cursor crosses into a fresh logical page: every
+                # live slot gets one (reservation makes this infallible)
+                act = [i for i, s in enumerate(slots) if not s.done]
+                if act:
+                    st, ok = alloc_step_pages_jit(
+                        PageState(cache.kv.table, self._owner),
+                        jnp.asarray(act, jnp.int32),
+                        jnp.asarray(cur // PS, jnp.int32))
+                    if not bool(ok):  # reservations make this unreachable
+                        raise RuntimeError(
+                            "page pool exhausted at the decode boundary — "
+                            "reservation accounting broken")
+                    self._owner = st.owner
+                    cache = self._with_table(cache, st.table)
             nxt, cache = self._step(self.params, nxt, cache,
                                     jnp.asarray(start), jnp.asarray(temps),
                                     self._next_key())
             cur += 1
 
-    def _admittable(self, pending: List[Request], cur: int) -> Optional[int]:
+    def _admittable(self, pending: List[Request], cur: int,
+                    reserved: Optional[Dict[int, int]] = None
+                    ) -> Optional[int]:
         """Index of the first pending request that fits at cursor ``cur``:
         its prompt must fit below the cursor and its token budget inside the
-        remaining cache depth."""
+        remaining cache depth — and, paged, its worst-case page span must
+        fit next to the live slots' reservations."""
         for j, r in enumerate(pending):
             plen = int(r.prompt.shape[-1])
-            if plen <= cur and cur + r.max_new_tokens <= self.max_len:
-                return j
+            if plen > cur or cur + r.max_new_tokens > self.max_len:
+                continue
+            if self._paged:
+                need = pages_for_span(cur - plen, cur + r.max_new_tokens,
+                                      self._page_size)
+                if sum(reserved.values()) + need > self._num_pages - 1:
+                    continue
+            return j
         return None
 
+    # -- page-pool bookkeeping (paged mode) --------------------------------
+    def _with_table(self, cache: DecodeCache, table) -> DecodeCache:
+        kv = cache.kv
+        return DecodeCache(
+            PagedKVCache(kv.k, kv.v, table, kv.length, kv.page_size),
+            cache.ssm, cache.length)
+
+    def _palloc(self, cache: DecodeCache, slot: int, lo_page: int,
+                hi_page: int) -> DecodeCache:
+        """Map fresh pool pages at ``slot``'s logical pages [lo, hi]."""
+        logical = jnp.arange(lo_page, hi_page + 1, dtype=jnp.int32)
+        st, ok = alloc_slot_pages_jit(
+            PageState(cache.kv.table, self._owner),
+            jnp.asarray(slot, jnp.int32), logical)
+        if not bool(ok):  # reservations make this unreachable
+            raise RuntimeError("page pool exhausted at prefill/admission — "
+                               "reservation accounting broken")
+        self._owner = st.owner
+        return self._with_table(cache, st.table)
+
     def _admit(self, r: Request, cache, slot: int, cur: int):
-        """Prefill ``r`` alone and splice its KV rows into ``cache[slot]``
-        at ``[cur - plen, cur)``; returns (first token, cache)."""
+        """Prefill ``r`` alone and splice its KV rows into ``slot``'s cache
+        at virtual positions ``[cur - plen, cur)``; returns (first token,
+        cache). Contiguous: a dynamic_update_slice into the slot's row,
+        single-device only. Paged: a page-table splice into the slot's
+        freshly allocated pages — under a mesh the prefill runs replicated
+        over the data axes with the running batch's TP specs, the
+        shard-aware admission the contiguous splice can't do."""
         plen = int(r.prompt.shape[-1])
         p_adm = min(-(-plen // _ADMIT_ALIGN) * _ADMIT_ALIGN, cur)
         fn = self._admit_fn(p_adm)
@@ -453,33 +627,81 @@ class ServeEngine:
     def _admit_fn(self, p_adm: int):
         """Jitted single-request admission prefill, cached per padded
         prompt width (widths are rounded to ``_ADMIT_ALIGN`` to bound the
-        number of traces)."""
+        number of traces). The cache write is the only layout-specific
+        part: contiguous DUS splice vs page-table splice."""
         fn = self._admit_fns.get(p_adm)
         if fn is not None:
             return fn
-        cfg = self.cfg
-        model = Model(cfg)
+        if self.comm_plan is not None:
+            fn = self._build_admit_comm(p_adm)  # paged-only (_can_admit)
+        else:
+            cfg = self.cfg
+            model = Model(cfg)
+            paged = self._paged
 
-        def admit(params, tokens, cache, slot, dest, start1, temp1, key):
-            tmp = init_cache(cfg, 1, tokens.shape[1],
-                             dtype=self._cache_dtype)
-            logits, _, tmp = model.forward(params, {"tokens": tokens},
-                                           cache=tmp, start=start1)
-            nxt = select_tokens(_last_logits(cfg, logits), temp1, key)
-            k = jax.lax.dynamic_update_slice(
-                cache.kv.k, tmp.kv.k.astype(cache.kv.k.dtype),
-                (0, slot, dest, 0, 0))
-            v = jax.lax.dynamic_update_slice(
-                cache.kv.v, tmp.kv.v.astype(cache.kv.v.dtype),
-                (0, slot, dest, 0, 0))
-            new_cache = DecodeCache(
-                KVCache(k, v, cache.kv.length, cache.kv.ring), cache.ssm,
-                cache.length)
-            return nxt, new_cache
+            def admit(params, tokens, cache, slot, dest, start1, temp1, key):
+                tmp = init_cache(cfg, 1, tokens.shape[1],
+                                 dtype=self._cache_dtype)
+                logits, _, tmp = model.forward(params, {"tokens": tokens},
+                                               cache=tmp, start=start1)
+                nxt = select_tokens(_last_logits(cfg, logits), temp1, key)
+                if paged:
+                    kv = paged_splice(cache.kv, slot, dest,
+                                      tmp.kv.k[:, 0], tmp.kv.v[:, 0])
+                else:
+                    k = jax.lax.dynamic_update_slice(
+                        cache.kv.k, tmp.kv.k.astype(cache.kv.k.dtype),
+                        (0, slot, dest, 0, 0))
+                    v = jax.lax.dynamic_update_slice(
+                        cache.kv.v, tmp.kv.v.astype(cache.kv.v.dtype),
+                        (0, slot, dest, 0, 0))
+                    kv = KVCache(k, v, cache.kv.length, cache.kv.ring)
+                return nxt, DecodeCache(kv, cache.ssm, cache.length)
 
-        fn = jax.jit(admit, donate_argnums=(2,))
+            fn = jax.jit(admit, donate_argnums=(2,))
         self._admit_fns[p_adm] = fn
         return fn
+
+    def _build_admit_comm(self, p_adm: int):
+        """Admission prefill on the manual-TP (VCI stream) path: B=1
+        replicates over the data axes, weights stay Megatron-sharded, the
+        collectives ride lane 0's per-purpose streams, and the splice writes
+        each rank's LOCAL KV heads into its local page pool shard."""
+        cfg, mesh, plan = self.cfg, self.mesh, self.comm_plan
+        assert mesh is not None
+        tp = _mesh_tp(mesh)
+        kvh = cfg.num_kv_heads * max(1, cfg.decode_kv_expand)
+        kv_loc = kvh // tp if (tp > 1 and kvh % tp == 0) else kvh
+
+        def admit(params, tokens, cache, slot, dest, start1, temp1, key):
+            def inner(params, tokens, cache, slot, dest, start1, temp1, key):
+                comm = plan.comm(0)
+                model = Model(cfg, None, comm=comm)
+                shape = (cfg.num_layers, 1, tokens.shape[1], kv_loc,
+                         cfg.head_dim)
+                dt = cache.kv.k.dtype
+                tmp = DecodeCache(
+                    KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt),
+                            jnp.zeros((), jnp.int32), False),
+                    None, jnp.zeros((), jnp.int32))
+                logits, _, tmp = model.forward(params, {"tokens": tokens},
+                                               cache=tmp, start=start1)
+                logits = comm.drain(logits)
+                nxt = select_tokens(_last_logits(cfg, logits), temp1, key)
+                kv = paged_splice(cache.kv, slot, dest,
+                                  tmp.kv.k[:, 0], tmp.kv.v[:, 0])
+                return nxt, DecodeCache(kv, None, cache.length)
+
+            cspec = serve_cache_specs(cache, tp, 1)
+            f = shard_map(
+                inner, mesh=mesh,
+                in_specs=(serve_param_specs(cfg, params, tp),
+                          P(None, None), cspec, P(), P(), P(), P(), P()),
+                out_specs=(P(None, None), cspec),
+                check_vma=False, axis_names=set(mesh.axis_names))
+            return f(params, tokens, cache, slot, dest, start1, temp1, key)
+
+        return jax.jit(admit, donate_argnums=(2,))
 
     # -- grouped (equal prompt length) fallback ---------------------------
     def _run_grouped(self, reqs: List[Request]) -> None:
@@ -487,6 +709,7 @@ class ServeEngine:
         b = len(reqs)
         prompts = np.stack([r.prompt for r in reqs])
         cache = init_cache(cfg, b, self.max_len, dtype=self._cache_dtype)
+        self._note_cache(cache)
         temps = np.asarray([self._temp_of(r) for r in reqs], np.float32)
         # comm-mode step functions take concrete (all-zero) start offsets;
         # the plain path keeps None (SSM/audio reject per-row offsets).

@@ -59,7 +59,9 @@ def test_moe_expert_parallel_all_to_all(multidev):
 
 def test_serve_streams_match_single_stream(multidev):
     """Manual-TP decode on VCI streams == single-device tokens (dense+MoE),
-    with the realized VCI mapping checked at pool sizes 1 and 8."""
+    with the realized VCI mapping checked at pool sizes 1 and 8 — for the
+    contiguous AND the paged KV cache, the latter with mid-stream admission
+    running under the mesh."""
     _run(multidev, "serve_streams_match_single_stream")
 
 

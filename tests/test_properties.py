@@ -317,3 +317,120 @@ def test_moe_dropfree_is_exact_topk_mixture(seed):
                                rtol=5e-4, atol=5e-5)
     # Switch LB loss ~>= 1 (soft probs vs hard counts allow a small dip)
     assert float(aux["load_balance"]) >= 0.98
+
+
+# ---------------------------------------------------------------------------
+# Page allocator (paged KV cache ownership map) invariants
+# ---------------------------------------------------------------------------
+
+def _page_alloc_driver(seed, num_pages, batch, max_pages, n_ops,
+                       use_jit=False):
+    """Random alloc/step-alloc/free interleaving; checks after EVERY op:
+
+    I1 no double ownership — each mapped table entry names an in-range,
+       non-trash pool page whose owner IS that slot, and no pool page is
+       mapped by two entries;
+    I2 owner/table agree — a slot owns exactly the pages its row maps;
+    I3 failed allocs stay consistent — ``ok`` is False iff the pool had
+       fewer free pages than requested, and partial results still satisfy
+       I1/I2. Returns the final state (for the reclamation/jit checks).
+    """
+    from repro.serve import paging as pg
+
+    alloc = pg.alloc_slot_pages_jit if use_jit else pg.alloc_slot_pages
+    step = pg.alloc_step_pages_jit if use_jit else pg.alloc_step_pages
+    free = pg.free_slot_pages_jit if use_jit else pg.free_slot_pages
+
+    rng = np.random.default_rng(seed)
+    st = pg.page_state_init(num_pages, batch, max_pages)
+    mapped = {b: set() for b in range(batch)}  # slot -> mapped logicals
+
+    def check(st):
+        table = np.asarray(st.table)
+        owner = np.asarray(st.owner)
+        assert owner[pg.TRASH_PAGE] == pg.OWNER_RESERVED
+        seen = {}
+        for b in range(batch):
+            ids = table[b][table[b] >= 0]
+            for pid in ids:
+                assert pg.TRASH_PAGE < pid < num_pages, (b, pid)
+                assert owner[pid] == b, (b, pid, owner[pid])
+                assert pid not in seen, f"page {pid} mapped twice"
+                seen[pid] = b
+        # I2: ownership without a table entry would leak a page
+        for pid in range(num_pages):
+            if owner[pid] >= 0:
+                assert pid in seen and seen[pid] == owner[pid]
+
+    for _ in range(n_ops):
+        op = rng.integers(0, 3)
+        free_now = int(np.asarray(pg.pages_free(st)))
+        if op == 0:  # range alloc for one slot
+            b = int(rng.integers(0, batch))
+            avail = sorted(set(range(max_pages)) - mapped[b])
+            if not avail:
+                continue
+            n = int(rng.integers(1, len(avail) + 1))
+            logical = jnp.asarray(avail[:n], jnp.int32)
+            st, ok = alloc(st, jnp.asarray(b, jnp.int32), logical)
+            assert bool(ok) == (free_now >= n)
+            got = np.asarray(st.table)[b, np.asarray(logical)]
+            mapped[b] |= {int(p) for p, g in zip(avail[:n], got) if g >= 0}
+        elif op == 1:  # decode page-boundary alloc
+            log = int(rng.integers(0, max_pages))
+            slots = [b for b in range(batch) if log not in mapped[b]]
+            if not slots:
+                continue
+            st, ok = step(st, jnp.asarray(slots, jnp.int32),
+                          jnp.asarray(log, jnp.int32))
+            assert bool(ok) == (free_now >= len(slots))
+            got = np.asarray(st.table)[np.asarray(slots), log]
+            for b, g in zip(slots, got):
+                if g >= 0:
+                    mapped[b].add(log)
+        else:  # free a slot
+            b = int(rng.integers(0, batch))
+            st = free(st, jnp.asarray(b, jnp.int32))
+            mapped[b] = set()
+        check(st)
+
+    # full reclamation: freeing every slot returns the whole pool
+    for b in range(batch):
+        st = free(st, jnp.asarray(b, jnp.int32))
+    owner = np.asarray(st.owner)
+    assert int(np.asarray(pg.pages_used(st))) == 0
+    assert (np.asarray(st.table) == -1).all()
+    assert (owner[1:] == pg.OWNER_FREE).all()
+    return st
+
+
+def test_page_alloc_invariants_examples():
+    """Deterministic sweep (runs with or without hypothesis)."""
+    for seed in range(6):
+        rng = np.random.default_rng(200 + seed)
+        _page_alloc_driver(seed,
+                           num_pages=int(rng.integers(2, 20)),
+                           batch=int(rng.integers(1, 6)),
+                           max_pages=int(rng.integers(1, 8)),
+                           n_ops=20)
+
+
+def test_page_alloc_roundtrips_through_jit():
+    """The jitted allocator ops produce bit-identical state to the eager
+    ones over a shared op sequence (the engine calls the jitted forms)."""
+    for seed in (0, 3):
+        a = _page_alloc_driver(seed, num_pages=12, batch=3, max_pages=5,
+                               n_ops=15, use_jit=False)
+        b = _page_alloc_driver(seed, num_pages=12, batch=3, max_pages=5,
+                               n_ops=15, use_jit=True)
+        np.testing.assert_array_equal(np.asarray(a.table), np.asarray(b.table))
+        np.testing.assert_array_equal(np.asarray(a.owner), np.asarray(b.owner))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), num_pages=st.integers(2, 24),
+       batch=st.integers(1, 6), max_pages=st.integers(1, 8),
+       n_ops=st.integers(1, 25))
+def test_page_alloc_invariants(seed, num_pages, batch, max_pages, n_ops):
+    _page_alloc_driver(seed, num_pages=num_pages, batch=batch,
+                       max_pages=max_pages, n_ops=n_ops)

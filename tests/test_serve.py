@@ -251,3 +251,124 @@ def test_serve_step_matches_engine_stepping():
     [req] = eng.generate([Request(prompt=np.arange(4, dtype=np.int32),
                                   max_new_tokens=5)])
     np.testing.assert_array_equal(np.array(seq), req.generated)
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache engine
+# ---------------------------------------------------------------------------
+
+def test_paged_mixed_length_batch_matches_solo(olmo_setup):
+    """Paged cache, mixed prompt lengths: every request produces exactly the
+    tokens the CONTIGUOUS single-request engine produces — the two cache
+    layouts are token-identical by construction."""
+    cfg, params = olmo_setup
+    rng = np.random.default_rng(3)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, (plen,),
+                                        dtype=np.int32), max_new_tokens=6)
+            for plen in (3, 11, 7)]
+    eng = ServeEngine(cfg, params, batch_size=3, max_len=64, paged=True,
+                      page_size=8, num_pages=13)
+    eng.generate(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(
+            r.generated, _solo_tokens(cfg, params, r),
+            err_msg=f"prompt len {r.prompt.shape[-1]} corrupted by paging")
+
+
+def test_paged_recycling_reclaims_pages(olmo_setup):
+    """More requests than slots: tokens match solo AND every page is back
+    in the pool when the run drains (per-slot compaction for free)."""
+    cfg, params = olmo_setup
+    rng = np.random.default_rng(11)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, (plen,),
+                                        dtype=np.int32), max_new_tokens=n)
+            for plen, n in ((5, 3), (9, 6), (4, 8), (7, 2), (6, 5))]
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=64, paged=True,
+                      page_size=8, num_pages=13)
+    eng.generate(reqs)
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(
+            r.generated, _solo_tokens(cfg, params, r),
+            err_msg=f"request {i} corrupted by paged slot recycling")
+    owner = np.asarray(eng._owner)
+    assert owner[0] == -2 and (owner[1:] == -1).all(), \
+        f"pages leaked after drain: {owner}"
+
+
+def test_paged_lower_resident_bytes_than_contiguous(olmo_setup):
+    """At equal traffic a right-sized page pool keeps fewer resident cache
+    bytes than the contiguous (batch, max_len) cache — the paging payoff."""
+    cfg, params = olmo_setup
+    def mk():
+        rng = np.random.default_rng(5)
+        return [Request(prompt=rng.integers(0, cfg.vocab_size, (p,),
+                                            dtype=np.int32),
+                        max_new_tokens=4) for p in (6, 9, 5, 8)]
+    eng_c = ServeEngine(cfg, params, batch_size=4, max_len=128)
+    eng_p = ServeEngine(cfg, params, batch_size=4, max_len=128, paged=True,
+                        page_size=8, num_pages=13)
+    a, b = mk(), mk()
+    eng_c.generate(a)
+    eng_p.generate(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x.generated, y.generated)
+    assert 0 < eng_p.cache_bytes_resident < eng_c.cache_bytes_resident
+
+
+def test_paged_stop_token_and_budgets(olmo_setup):
+    """Per-request budgets and stop tokens behave identically paged — the
+    stop-token finish (record() without appending) must also reclaim the
+    slot's pages mid-page."""
+    cfg, params = olmo_setup
+    reqs = [Request(prompt=np.arange(4, dtype=np.int32), max_new_tokens=n)
+            for n in (2, 7, 4)]
+    eng = ServeEngine(cfg, params, batch_size=3, max_len=32, paged=True,
+                      page_size=4, num_pages=13)
+    eng.generate(reqs)
+    assert [r.generated.shape[-1] for r in reqs] == [2, 7, 4]
+    for r in reqs:
+        np.testing.assert_array_equal(
+            r.generated, _solo_tokens(cfg, params, r, max_len=32))
+
+    # a stop token that actually fires: truncates at the un-stopped run's
+    # first repeat-free position, and the drained pool holds no pages
+    base = reqs[1]                        # 7 greedy tokens
+    j = next(j for j in range(1, 7)
+             if base.generated[j] not in base.generated[:j])
+    stopped = Request(prompt=np.arange(4, dtype=np.int32), max_new_tokens=7,
+                      stop_token=int(base.generated[j]))
+    other = Request(prompt=np.arange(9, dtype=np.int32), max_new_tokens=7)
+    eng.generate([stopped, other])
+    np.testing.assert_array_equal(stopped.generated, base.generated[:j])
+    assert other.generated.shape == (7,)
+    owner = np.asarray(eng._owner)
+    assert owner[0] == -2 and (owner[1:] == -1).all(), \
+        f"stop-token finish leaked pages: {owner}"
+
+
+def test_paged_pool_too_small_rejected(olmo_setup):
+    """A request whose worst-case page span exceeds the pool must be
+    rejected at generate() time, not starve the allocator mid-decode."""
+    cfg, params = olmo_setup
+    eng = ServeEngine(cfg, params, batch_size=1, max_len=64, paged=True,
+                      page_size=8, num_pages=4)  # 3 allocatable pages
+    ok = Request(prompt=np.arange(8, dtype=np.int32), max_new_tokens=16)
+    bad = Request(prompt=np.arange(8, dtype=np.int32), max_new_tokens=17)
+    with pytest.raises(ValueError, match="grow the pool"):
+        eng.generate([bad])
+    eng.generate([ok])
+    assert ok.generated.shape == (16,)
+
+
+def test_paged_falls_back_for_ring_cache():
+    """Sliding-window (ring) archs have no paged layout: the engine keeps
+    the grouped contiguous fallback and still serves correctly."""
+    cfg = get_config("mixtral-8x22b-smoke")   # sliding_window=64
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=96, paged=True)
+    assert eng._ring and not eng._paged
+    reqs = [Request(prompt=np.arange(4, dtype=np.int32), max_new_tokens=3)
+            for _ in range(2)]
+    eng.generate(reqs)
+    for r in reqs:
+        assert r.generated.shape == (3,)
